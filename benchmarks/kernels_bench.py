@@ -1,0 +1,82 @@
+"""Kernel microbenchmarks (interpret-mode wall times are STRUCTURAL only —
+the CPU interpreter executes the kernel body; TPU perf comes from the
+roofline, not these numbers). Also times each kernel's jnp reference, which
+IS meaningful on CPU."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run(quick: bool = False) -> Dict:
+    from repro.kernels import ops, ref as kref
+    from repro.kernels.flash_attention import flash_attention
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    S, D = (256, 64) if quick else (1024, 128)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (S, D))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (S, D))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (S, D))
+    out["flash_attention_ref_us"] = _time(
+        lambda a, b, c: kref.flash_attention_ref(a, b, c), q, k, v)
+    out["flash_attention_interpret_us"] = _time(
+        lambda a, b, c: flash_attention(a, b, c, interpret=True), q, k, v)
+
+    b, S2, H, P, N = 1, (128 if quick else 512), 8, 32, 64
+    xh = jax.random.normal(jax.random.fold_in(key, 4), (b, S2, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 5),
+                                           (b, S2, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 6), (H,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(key, 7), (b, S2, H, N)) * 0.3
+    Cm = jax.random.normal(jax.random.fold_in(key, 8), (b, S2, H, N)) * 0.3
+    out["mamba_scan_ref_us"] = _time(
+        lambda *a: kref.mamba_scan_ref(*a, 64)[0], xh, dt, A, B, Cm)
+    out["mamba_scan_interpret_us"] = _time(
+        lambda *a: ops.mamba_scan_b(*a, chunk=64), xh, dt, A, B, Cm)
+
+    m = 92
+    from repro.core.thermal import ThermalConfig, conductances
+    tc = ThermalConfig(theta_ja=12.0)
+    g_v, g_lat = conductances(m, m, tc)
+    T = jnp.full((m, m), 30.0)
+    Pw = jax.random.uniform(jax.random.fold_in(key, 9), (m, m)) * 5e-3
+    nbrc = jnp.full((m, m), 4.0).at[0, :].add(-1).at[-1, :].add(-1) \
+        .at[:, 0].add(-1).at[:, -1].add(-1)
+    diag = g_v + g_lat * nbrc
+    out["thermal_stencil_ref_us"] = _time(
+        lambda *a: kref.thermal_stencil_ref(*a, 64), T, Pw, diag, g_lat,
+        g_v * 25.0)
+    out["thermal_stencil_interpret_us"] = _time(
+        lambda t, p, d: ops.thermal_sweep(t, p, d, g_lat=g_lat,
+                                          g_v_tamb=g_v * 25.0, iters=64),
+        T, Pw, diag)
+
+    M = 128 if quick else 256
+    a8 = jax.random.randint(jax.random.fold_in(key, 10), (M, M), -128, 127,
+                            jnp.int8)
+    b8 = jax.random.randint(jax.random.fold_in(key, 11), (M, M), -128, 127,
+                            jnp.int8)
+    ug = jax.random.bits(jax.random.fold_in(key, 12), (M, M), jnp.uint32)
+    ub = jax.random.bits(jax.random.fold_in(key, 13), (M, M), jnp.uint32)
+    from repro.kernels.overscale_matmul import bit_probs_to_cdf
+    probs = np.zeros(32)
+    probs[28:] = 0.01
+    cdf = bit_probs_to_cdf(probs)
+    out["overscale_matmul_ref_us"] = _time(
+        kref.overscale_matmul_ref, a8, b8, ug, ub, cdf)
+    out["overscale_matmul_interpret_us"] = _time(
+        lambda *a: ops.overscale_mm(*a), a8, b8, ug, ub, cdf)
+    return out

@@ -1,0 +1,31 @@
+"""Re-lower + re-analyze one cell (the §Perf inner loop)."""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+import argparse, json, sys, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("cell", help="arch:shape")
+    ap.add_argument("--tag", default="opt")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    from repro.launch.dryrun import run_cell
+    hlo = f"artifacts/hlo_perf/{arch}_{shape}_{args.tag}.hlo"
+    os.makedirs("artifacts/hlo_perf", exist_ok=True)
+    rec = run_cell(arch, shape, "pod", save_hlo=hlo)
+    if not rec["ok"]:
+        print(rec["error"]); sys.exit(1)
+    from benchmarks.roofline import analyze_cell
+    r = analyze_cell(arch, shape, args.tag, hlo_dir="artifacts/hlo_perf")
+    print(json.dumps({k: r[k] for k in
+                      ("compute_s", "memory_s", "collective_s", "dominant",
+                       "useful_ratio", "roofline_fraction")}, indent=1))
+    print("mem/dev GB: args=%.2f temp=%.2f" % (
+        rec["argument_bytes_per_device"]/1e9, rec["temp_bytes_per_device"]/1e9))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Fault-tolerance walkthrough: checkpoint/restart, failure injection,
+straggler detection, elastic rescale.
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import tempfile
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, make_iterator
+from repro.ft.elastic import choose_mesh_shape
+from repro.ft.monitor import (FailureInjector, Heartbeat, StragglerDetector,
+                              retry_step)
+from repro.models.model import Model
+from repro.train.optimizer import make_optimizer
+from repro.train.step import make_train_step
+
+
+def main():
+    cfg = registry.get("llama3.2-1b").reduced()
+    model = Model(cfg)
+    opt = make_optimizer(cfg, lr=1e-3, warmup_steps=2, total_steps=100)
+    step_fn = jax.jit(make_train_step(model, opt))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    it = make_iterator(cfg, DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                       global_batch=8, branch=2))
+    tmp = tempfile.mkdtemp()
+    ckpt = CheckpointManager(tmp, keep_last=2)
+    injector = FailureInjector(fail_at={4, 7})
+    straggler = StragglerDetector(min_samples=4)
+    hb = Heartbeat(timeout_s=30.0)
+
+    import time
+    for i in range(10):
+        batch = next(it)
+
+        def do():
+            injector.maybe_fail(i)
+            return step_fn(params, opt_state, batch, i)
+
+        t0 = time.time()
+        params, opt_state, m = retry_step(
+            do, on_failure=lambda a, e: print(f"  [ft] {e} -> retry {a}"))
+        hb.beat("worker0")
+        ev = straggler.record("worker0", i, time.time() - t0)
+        if ev:
+            print(f"  [ft] straggler flagged: {ev.ratio:.1f}x median")
+        if (i + 1) % 5 == 0:
+            ckpt.save(i + 1, {"params": params, "opt": opt_state})
+            print(f"step {i}: loss={float(m['loss']):.3f} (checkpointed)")
+        else:
+            print(f"step {i}: loss={float(m['loss']):.3f}")
+
+    ckpt.wait()
+    print(f"\ncheckpoints: {ckpt.all_steps()}; restoring latest...")
+    restored, got = ckpt.restore({"params": params, "opt": opt_state})
+    print(f"restored step {got}; dead workers: {hb.dead() or 'none'}")
+    print("elastic: 256 devices ->", choose_mesh_shape(256, 16),
+          "| after losing a host (248):", choose_mesh_shape(248, 16))
+
+
+if __name__ == "__main__":
+    main()

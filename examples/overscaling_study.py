@@ -1,0 +1,50 @@
+"""Fig-8 study: voltage over-scaling on error-tolerant apps (LeNet + HD).
+
+Sweeps the timing-violation budget gamma, runs Algorithm 1 with the relaxed
+constraint on the FPGA-mapped app netlists, derives the bit-error profile
+from the violating-path population, and measures end accuracy through the
+error-injected int8 matmul.
+
+    PYTHONPATH=src python examples/overscaling_study.py [--quick]
+"""
+import argparse
+
+import jax
+
+from repro.core import apps, netlist as NL, overscaling as OS, thermal
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(42)
+    print("training LeNet on synthetic digits...")
+    p, _ = apps.lenet_train(key, steps=200 if args.quick else 500)
+    hd = apps.hd_train(key)
+    print(f"clean accuracy: lenet={apps.lenet_accuracy(p, key):.4f} "
+          f"hd={apps.hd_accuracy(hd, key):.4f}\n")
+
+    tc = thermal.ThermalConfig(theta_ja=12.0)
+    gammas = [1.0, 1.2, 1.35] if args.quick else [1.0, 1.1, 1.2, 1.3, 1.35, 1.4]
+    print(f"{'app':8s} {'gamma':6s} {'V_core':7s} {'V_bram':7s} "
+          f"{'saving':8s} {'accuracy':8s}")
+    for stats, label in ((apps.LENET_STATS, "lenet"), (apps.HD_STATS, "hd")):
+        nl = NL.generate(stats)
+        for g in gammas:
+            r = OS.run(nl, g, t_amb=40.0, tc=tc)
+            if label == "lenet":
+                acc = apps.lenet_accuracy(
+                    p, key, bit_probs=apps.scale_bit_probs(r.bit_probs))
+            else:
+                acc = apps.hd_accuracy(
+                    hd, key, flip_prob=apps.hd_flip_prob(r.bit_probs))
+            print(f"{label:8s} {g:<6.2f} {r.v_core:<7.2f} {r.v_bram:<7.2f} "
+                  f"{r.saving*100:<7.1f}% {acc:<8.4f}")
+    print("\npaper Fig 8: ~34% saving at gamma=1.0; at 1.35: LeNet 48%/-3%, "
+          "HD 50%/-0.5%; errors spike past ~1.35")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: build a model, train a few steps, serve a few tokens — on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch qwen3-1.7b]
+
+Uses the reduced (smoke) configs; the same code paths scale to the production
+meshes via launch/train.py + launch/dryrun.py.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, make_iterator
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+from repro.train.optimizer import make_optimizer
+from repro.train.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch).reduced()
+    model = Model(cfg)
+    print(f"arch={cfg.name} family={cfg.family} params={model.n_params():,}")
+
+    # --- train ---------------------------------------------------------------
+    opt = make_optimizer(cfg, lr=3e-3, warmup_steps=5, total_steps=200)
+    step = jax.jit(make_train_step(model, opt))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    it = make_iterator(cfg, DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                       global_batch=8, branch=2))
+    for i in range(args.steps):
+        params, opt_state, m = step(params, opt_state, next(it), i)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i}: loss={float(m['loss']):.3f} "
+                  f"acc={float(m['accuracy']):.3f}")
+
+    # --- serve ---------------------------------------------------------------
+    if cfg.family in ("vlm", "audio"):
+        print("(serving demo skipped for stub-frontend families)")
+        return
+    eng = Engine(model, params, batch_slots=2, max_len=128)
+    for rid in range(3):
+        eng.submit(Request(rid, np.arange(5 + rid) % cfg.vocab_size,
+                           max_new=8))
+    for r in eng.run():
+        print(f"request {r.rid}: generated {r.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Error-tolerant demo applications for voltage over-scaling (paper §III-D).
+
+- LeNet-style CNN mapped as a systolic-array accelerator (im2col matmuls with
+  int8 quantization and 32-bit accumulators), trained on a deterministic
+  synthetic digit set (no external data in this environment).
+- HD (hyperdimensional) 2-class classifier (face / non-face analogue) with
+  random-projection binary encoding and Hamming associative memory [44,49].
+
+Inference consumes the per-bit flip profile from core/overscaling.py via the
+error-injected matmul (kernels/overscale_matmul ref path): requantization
+after each layer clips corrupted accumulators exactly like the fixed-point
+hardware would — the mechanism behind DNN error tolerance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.netlist import BenchStats
+from repro.kernels import overscale_matmul as om
+
+# FPGA-mapped incarnations of the two apps (for the power side of Fig. 8)
+LENET_STATS = BenchStats("lenet_systolic", 14200, 32, 72, 120.0, "mixed")
+HD_STATS = BenchStats("hd_encoder", 21800, 16, 0, 140.0, "routing")
+
+# error-model sensitization factor: a violating carry path produces a wrong
+# capture only under the sensitizing data pattern (long carry propagation)
+SENSITIZE = 0.0017
+
+
+def scale_bit_probs(bit_probs: np.ndarray) -> np.ndarray:
+    return np.clip(np.asarray(bit_probs) * SENSITIZE, 0.0, 1.0)
+
+
+# =============================================================================
+# synthetic digits
+# =============================================================================
+
+TEMPLATE_KEY = jax.random.PRNGKey(20190415)  # class templates are the TASK
+FACE_KEY = jax.random.PRNGKey(20190416)
+
+
+def make_digits(key, n: int, img: int = 16):
+    """Deterministic parametric digit-ish dataset: class templates + jitter."""
+    _, k_lbl, k_shift, k_noise = jax.random.split(key, 4)
+    k_tmpl = TEMPLATE_KEY
+    base = jax.random.normal(k_tmpl, (10, 8, 8))
+    base = jax.image.resize(base, (10, img, img), "cubic")
+    base = (base - base.mean()) / (base.std() + 1e-6)
+    labels = jax.random.randint(k_lbl, (n,), 0, 10)
+    shifts = jax.random.randint(k_shift, (n, 2), -3, 4)
+    noise = 0.9 * jax.random.normal(k_noise, (n, img, img))
+
+    def render(lbl, sh, nz):
+        t = base[lbl]
+        t = jnp.roll(t, sh[0], axis=0)
+        t = jnp.roll(t, sh[1], axis=1)
+        return t + nz
+
+    x = jax.vmap(render)(labels, shifts, noise)
+    return x[..., None], labels
+
+
+# =============================================================================
+# LeNet-mini (conv-pool-conv-pool-fc) — float training, int8 inference
+# =============================================================================
+
+@dataclass
+class LeNetParams:
+    w1: jax.Array  # (3,3,1,8)
+    w2: jax.Array  # (3,3,8,16)
+    w3: jax.Array  # (256,10)
+
+
+def lenet_init(key) -> LeNetParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return LeNetParams(
+        w1=jax.random.normal(k1, (3, 3, 1, 8)) * 0.3,
+        w2=jax.random.normal(k2, (3, 3, 8, 16)) * 0.1,
+        w3=jax.random.normal(k3, (4 * 4 * 16, 10)) * 0.05,
+    )
+
+
+def _im2col(x, k: int = 3):
+    """x:(B,H,W,C) -> (B,H,W,k*k*C) with SAME padding."""
+    B, H, W, C = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = [xp[:, i:i + H, j:j + W] for i in range(k) for j in range(k)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _pool2(x):
+    B, H, W, C = x.shape
+    return x.reshape(B, H // 2, 2, W // 2, 2, C).max(axis=(2, 4))
+
+
+def lenet_apply(p: LeNetParams, x, matmul=None):
+    """matmul(a, b) defaults to float; int/error-injected path for inference."""
+    mm = matmul or (lambda a, b: a @ b)
+    B = x.shape[0]
+    c = _im2col(x)  # (B,16,16,9)
+    h = mm(c.reshape(-1, c.shape[-1]), p.w1.reshape(-1, 8)).reshape(B, 16, 16, 8)
+    h = _pool2(jax.nn.relu(h))  # (B,8,8,8)
+    c = _im2col(h)
+    h = mm(c.reshape(-1, c.shape[-1]), p.w2.reshape(-1, 16)).reshape(B, 8, 8, 16)
+    h = _pool2(jax.nn.relu(h))  # (B,4,4,16)
+    return mm(h.reshape(B, -1), p.w3)
+
+
+def lenet_train(key, steps: int = 400, batch: int = 128,
+                n_train: int = 4096) -> Tuple[LeNetParams, Dict]:
+    kd, kp = jax.random.split(key)
+    x, y = make_digits(kd, n_train)
+    p = lenet_init(kp)
+
+    def loss_fn(pt, xb, yb):
+        logits = lenet_apply(LeNetParams(*pt), xb)
+        return jnp.mean(
+            -jax.nn.log_softmax(logits)[jnp.arange(len(yb)), yb])
+
+    @jax.jit
+    def step(pt, opt_m, i):
+        idx = jax.random.randint(jax.random.fold_in(kd, i), (batch,), 0, n_train)
+        l, g = jax.value_and_grad(loss_fn)(pt, x[idx], y[idx])
+        opt_m = jax.tree_util.tree_map(lambda m, gg: 0.9 * m + gg, opt_m, g)
+        pt = jax.tree_util.tree_map(lambda w, m: w - 0.05 * m, pt, opt_m)
+        return pt, opt_m, l
+
+    pt = (p.w1, p.w2, p.w3)
+    opt_m = jax.tree_util.tree_map(jnp.zeros_like, pt)
+    for i in range(steps):
+        pt, opt_m, l = step(pt, opt_m, i)
+    return LeNetParams(*pt), {"final_loss": float(l)}
+
+
+def lenet_accuracy(p: LeNetParams, key, n: int = 1024,
+                   bit_probs: Optional[np.ndarray] = None) -> float:
+    x, y = make_digits(jax.random.fold_in(key, 999), n)
+    if bit_probs is None:
+        logits = lenet_apply(p, x)
+    else:
+        mm = om.make_int8_error_matmul(jnp.asarray(bit_probs, jnp.float32),
+                                       jax.random.fold_in(key, 7))
+        logits = lenet_apply(p, x, matmul=mm)
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+
+# =============================================================================
+# HD classifier
+# =============================================================================
+
+def make_faces(key, n: int, dim: int = 256):
+    """2-class gaussian-cluster analogue of the Caltech face/non-face task."""
+    _, k2, k3 = jax.random.split(key, 3)
+    mu = jax.random.normal(FACE_KEY, (2, dim)) * 0.34  # fixed class structure
+    y = jax.random.randint(k2, (n,), 0, 2)
+    x = mu[y] + jax.random.normal(k3, (n, dim))
+    return x, y
+
+
+@dataclass
+class HDModel:
+    proj: jax.Array  # (dim, D) random +-1
+    prototypes: jax.Array  # (2, D) binary
+
+
+def hd_encode(proj, x):
+    return (x @ proj > 0).astype(jnp.int8)  # (n, D) in {0,1}
+
+
+def hd_train(key, n: int = 4096, dim: int = 256, D: int = 1024) -> HDModel:
+    kp, kd = jax.random.split(key)
+    proj = jnp.sign(jax.random.normal(kp, (dim, D)))
+    x, y = make_faces(kd, n, dim)
+    h = hd_encode(proj, x)
+    protos = []
+    for c in range(2):
+        bundle = jnp.sum(jnp.where((y == c)[:, None], h, 0), axis=0)
+        cnt = jnp.sum(y == c)
+        protos.append((bundle > cnt / 2).astype(jnp.int8))
+    return HDModel(proj, jnp.stack(protos))
+
+
+def hd_accuracy(model: HDModel, key, n: int = 2048,
+                flip_prob: float = 0.0) -> float:
+    x, y = make_faces(jax.random.fold_in(key, 123), n)
+    h = hd_encode(model.proj, x)
+    if flip_prob > 0:
+        flips = jax.random.bernoulli(jax.random.fold_in(key, 5), flip_prob,
+                                     h.shape)
+        h = jnp.where(flips, 1 - h, h)
+    dist = jnp.sum(h[:, None, :] != model.prototypes[None], axis=-1)
+    return float(jnp.mean(jnp.argmin(dist, -1) == y))
+
+
+def hd_flip_prob(bit_probs: np.ndarray) -> float:
+    """Hypervector-bit flip prob: a bit flips when its sign-accumulator's
+    high bits are corrupted; the D-wide reduction exposes ~10x more captures
+    per output bit than a single MAC."""
+    return float(np.clip(10.0 * scale_bit_probs(bit_probs)[-12:].sum(), 0.0, 0.5))

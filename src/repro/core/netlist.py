@@ -1,0 +1,297 @@
+"""Abstract placed-and-routed design model (the VPR output analogue).
+
+A :class:`Netlist` is the object Algorithm 1/2 operate on:
+
+- an (m × n) tile grid with per-tile resource counts (LUT/SB/CB/LOCAL/FF per
+  CLB tile; BRAM and DSP columns like commercial devices),
+- per-tile activity (derived from primary-input activity via the Fig. 3
+  internal-activity model),
+- a set of timing paths, each a padded sequence of (resource class, tile id)
+  elements — timing analysis under arbitrary (T-grid, V_core, V_bram) is a
+  vectorized gather + sum over the characterized library.
+
+Designs are generated deterministically (seeded) from published-benchmark
+statistics (see vtr_benchmarks.py): utilization, BRAM/DSP usage, critical-path
+composition (routing- vs logic- vs memory-bound), base frequency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import characterization as C
+
+# per-CLB-tile effective element counts (COFFE-like tile composition)
+TILE_LUT = 10
+TILE_SB = 30
+TILE_CB = 15
+TILE_LOCAL = 25
+TILE_FF = 10
+
+
+@dataclass
+class Netlist:
+    name: str
+    m: int  # rows
+    n: int  # cols
+    # per-tile resource counts, shape (m*n, N_RESOURCES): *used* resources
+    used: np.ndarray
+    # per-tile total (used + unused leak too), shape (m*n, N_RESOURCES)
+    total: np.ndarray
+    # per-tile activity scale in [0,1] (multiplies the design-level activity)
+    tile_act: np.ndarray
+    # timing paths: (P, L) int arrays; res_class = -1 marks padding
+    path_res: np.ndarray
+    path_tile: np.ndarray
+    f_base_mhz: float  # paper-reported base frequency at worst case
+    n_luts: int = 0
+    n_brams: int = 0
+    n_dsps: int = 0
+    delay_scale: float = 1.0  # calibrates CP delay to 1000/f_base_mhz
+
+    @property
+    def n_tiles(self) -> int:
+        return self.m * self.n
+
+    def as_jax(self) -> Dict[str, jnp.ndarray]:
+        return {
+            "used": jnp.asarray(self.used, jnp.float32),
+            "total": jnp.asarray(self.total, jnp.float32),
+            "tile_act": jnp.asarray(self.tile_act, jnp.float32),
+            "path_res": jnp.asarray(self.path_res, jnp.int32),
+            "path_tile": jnp.asarray(self.path_tile, jnp.int32),
+            "delay_scale": jnp.asarray(self.delay_scale, jnp.float32),
+        }
+
+
+# =============================================================================
+# timing & power (vectorized; the T / P_lkg / P_dyn of Algorithm 1)
+# =============================================================================
+
+def path_delays(lib: C.DeviceLibrary, nl: Dict[str, jnp.ndarray],
+                T_tiles, v_core, v_bram):
+    """Delay of every path [ns]. T_tiles: (m*n,), voltages scalar (or batched
+    via vmap). Padding elements (res=-1) contribute 0."""
+    res = nl["path_res"]  # (P, L)
+    tile = nl["path_tile"]
+    valid = res >= 0
+    res_c = jnp.maximum(res, 0)
+    T_elem = T_tiles[tile]  # (P, L)
+    V_elem = jnp.where(res_c == C.BRAM, v_bram, v_core)
+    d = lib.delay(res_c, V_elem, T_elem)
+    scale = nl.get("delay_scale", jnp.asarray(1.0, jnp.float32))
+    return scale * jnp.sum(jnp.where(valid, d, 0.0), axis=-1)
+
+
+def crit_delay(lib, nl, T_tiles, v_core, v_bram):
+    return jnp.max(path_delays(lib, nl, T_tiles, v_core, v_bram))
+
+
+def tile_power(lib: C.DeviceLibrary, nl: Dict[str, jnp.ndarray],
+               T_tiles, v_core, v_bram, f_ghz, act_in):
+    """(P_lkg, P_dyn) per tile [mW]. Leakage counts *all* resources (used and
+    unused); dynamic counts used resources at the internal activity level."""
+    res_ids = jnp.arange(C.N_RESOURCES)
+    V_res = jnp.where(res_ids == C.BRAM, v_bram, v_core)  # (R,)
+    act_int = C.internal_activity(act_in)
+    # leakage: total counts x per-element leakage(T_tile)
+    lkg_e = lib.leakage(res_ids[None, :], V_res[None, :],
+                        T_tiles[:, None])  # (tiles, R)
+    p_lkg = jnp.sum(nl["total"] * lkg_e, axis=-1)
+    # dynamic: used counts x toggle power; DSP has its own activity curve
+    act_res = jnp.full((C.N_RESOURCES,), act_int)
+    act_res = act_res.at[C.DSP].set(C.dsp_activity_factor(act_in))
+    act_res = act_res.at[C.BRAM].set(act_int)
+    dyn_e = lib.dynamic(res_ids[None, :], V_res[None, :], f_ghz,
+                        act_res[None, :])  # (tiles, R)
+    p_dyn = jnp.sum(nl["used"] * dyn_e, axis=-1) * nl["tile_act"]
+    return p_lkg, p_dyn
+
+
+def total_power(lib, nl, T_tiles, v_core, v_bram, f_ghz, act_in):
+    lkg, dyn = tile_power(lib, nl, T_tiles, v_core, v_bram, f_ghz, act_in)
+    return jnp.sum(lkg) + jnp.sum(dyn)
+
+
+# =============================================================================
+# synthetic design generation from benchmark statistics
+# =============================================================================
+
+@dataclass(frozen=True)
+class BenchStats:
+    """Published-shape statistics for one benchmark (see vtr_benchmarks.py)."""
+    name: str
+    n_luts: int
+    n_brams: int
+    n_dsps: int
+    f_mhz: float  # VPR frequency at worst case
+    cp_profile: str  # 'routing' | 'logic' | 'mixed' | 'memory'
+    grid: Optional[Tuple[int, int]] = None
+    bram_path_ratio: float = 0.6  # longest-BRAM-path delay / CP delay
+    n_paths: int = 256
+
+
+def _cp_composition(profile: str, rng) -> Dict[int, int]:
+    """Element counts of a near-critical path for a given profile."""
+    if profile == "routing":
+        base = {C.LUT: 6, C.SB: 14, C.CB: 6, C.LOCAL: 5, C.FF: 2}
+    elif profile == "logic":
+        base = {C.LUT: 12, C.SB: 6, C.CB: 5, C.LOCAL: 8, C.FF: 2}
+    elif profile == "memory":
+        base = {C.LUT: 5, C.SB: 8, C.CB: 4, C.LOCAL: 4, C.FF: 2}
+    else:  # mixed
+        base = {C.LUT: 9, C.SB: 10, C.CB: 5, C.LOCAL: 6, C.FF: 2}
+    return base
+
+
+def generate(stats: BenchStats, seed: int = 0) -> Netlist:
+    # zlib.crc32, not hash(): PYTHONHASHSEED must not change the benchmarks
+    import zlib
+    rng = np.random.default_rng(seed + zlib.crc32(stats.name.encode()))
+    # --- grid size: CLB tiles to hold the LUTs at ~60% packing + BRAM/DSP cols
+    if stats.grid:
+        m, n = stats.grid
+    else:
+        n_clb = int(stats.n_luts / (TILE_LUT * 0.6))
+        side = int(np.ceil(np.sqrt(n_clb * 1.3)))
+        m = n = max(side, 8)
+    n_tiles = m * n
+
+    # --- column types: every 8th column BRAM, every 12th DSP (Stratix-like)
+    col_type = np.zeros(n, dtype=int)  # 0 CLB, 1 BRAM, 2 DSP
+    col_type[4::8] = 1
+    col_type[7::12] = 2
+
+    total = np.zeros((n_tiles, C.N_RESOURCES), np.float32)
+    used = np.zeros((n_tiles, C.N_RESOURCES), np.float32)
+    tile_act = np.zeros(n_tiles, np.float32)
+
+    tile_idx = np.arange(n_tiles).reshape(m, n)
+    clb_tiles = tile_idx[:, col_type == 0].ravel()
+    bram_tiles = tile_idx[:, col_type == 1].ravel()[::6]  # BRAM height 6 tiles
+    dsp_tiles = tile_idx[:, col_type == 2].ravel()[::4]  # DSP height 4 tiles
+
+    # capacity
+    total[clb_tiles, C.LUT] = TILE_LUT
+    total[clb_tiles, C.SB] = TILE_SB
+    total[clb_tiles, C.CB] = TILE_CB
+    total[clb_tiles, C.LOCAL] = TILE_LOCAL
+    total[clb_tiles, C.FF] = TILE_FF
+    total[bram_tiles, C.BRAM] = 1
+    total[bram_tiles, C.SB] = TILE_SB  # routing exists in hard columns too
+    total[dsp_tiles, C.DSP] = 1
+    total[dsp_tiles, C.SB] = TILE_SB
+
+    # placement: used resources clustered in a centered region (VPR-like)
+    n_clb_used = min(int(np.ceil(stats.n_luts / TILE_LUT)), len(clb_tiles))
+    center = np.array([m / 2, n / 2])
+    coords = np.stack(np.unravel_index(clb_tiles, (m, n)), 1)
+    order = np.argsort(((coords - center) ** 2).sum(1)
+                       + rng.uniform(0, m, len(clb_tiles)))
+    place = clb_tiles[order[:n_clb_used]]
+    used[place, C.LUT] = TILE_LUT
+    used[place, C.SB] = TILE_SB * 0.7
+    used[place, C.CB] = TILE_CB * 0.7
+    used[place, C.LOCAL] = TILE_LOCAL * 0.6
+    used[place, C.FF] = TILE_FF * 0.8
+    ub = bram_tiles[:min(stats.n_brams, len(bram_tiles))]
+    used[ub, C.BRAM] = 1
+    ud = dsp_tiles[:min(stats.n_dsps, len(dsp_tiles))]
+    used[ud, C.DSP] = 1
+    tile_act[place] = rng.uniform(0.6, 1.0, len(place))
+    tile_act[ub] = rng.uniform(0.7, 1.0, len(ub))
+    tile_act[ud] = rng.uniform(0.7, 1.0, len(ud))
+
+    # --- paths: near-critical population + BRAM/DSP paths
+    comp = _cp_composition(stats.cp_profile, rng)
+    L = sum(comp.values()) + 2
+    P = stats.n_paths
+    path_res = -np.ones((P, L), np.int64)
+    path_tile = np.zeros((P, L), np.int64)
+
+    def fill_path(i, elems, tiles_pool, length_scale):
+        seq = []
+        for r, cnt in elems.items():
+            seq += [r] * max(int(round(cnt * length_scale)), 1)
+        rng.shuffle(seq)
+        seq = seq[:L]
+        path_res[i, :len(seq)] = seq
+        # a path traverses a contiguous neighborhood of tiles
+        start = tiles_pool[rng.integers(len(tiles_pool))]
+        si, sj = np.unravel_index(start, (m, n))
+        for e in range(len(seq)):
+            di, dj = rng.integers(-2, 3), rng.integers(-2, 3)
+            ti = np.clip(si + di + e // 3, 0, m - 1)
+            tj = np.clip(sj + dj, 0, n - 1)
+            path_tile[i, e] = ti * n + tj
+
+    n_bram_paths = max(P // 8, 4) if stats.n_brams else 0
+    n_dsp_paths = max(P // 16, 2) if stats.n_dsps else 0
+    for i in range(P):
+        if i < n_bram_paths:
+            elems = dict(_cp_composition("memory", rng))
+            elems[C.BRAM] = 1
+            scale = stats.bram_path_ratio * rng.uniform(0.85, 1.0)
+            pool = ub if len(ub) else place
+        elif i < n_bram_paths + n_dsp_paths:
+            elems = dict(_cp_composition("mixed", rng))
+            elems[C.DSP] = 1
+            scale = rng.uniform(0.5, 0.8)
+            pool = ud if len(ud) else place
+        else:
+            elems = comp
+            # near-critical population: top path at 1.0, tail down to 0.7
+            scale = 1.0 if i == P - 1 else rng.uniform(0.7, 1.0)
+            pool = place
+        fill_path(i, elems, pool, scale)
+
+    # --- enforce path-delay structure at worst case -------------------------
+    # hard-block paths must sit at their published ratio of the soft CP
+    # (e.g. LU8PEEng's longest BRAM path is CP/21); trim soft elements of
+    # hard paths until they fit, using worst-case element delays.
+    lib = C.default_library()
+    res_ids = np.arange(C.N_RESOURCES)
+    v_elem = np.where(res_ids == C.BRAM, C.V_BRAM_NOM, C.V_CORE_NOM)
+    d_elem = np.asarray(lib.delay(jnp.asarray(res_ids),
+                                  jnp.asarray(v_elem, np.float32),
+                                  jnp.asarray(C.T_MAX)))
+
+    def wc_delay(i):
+        r = path_res[i]
+        return d_elem[np.maximum(r, 0)][r >= 0].sum()
+
+    soft = [i for i in range(P)
+            if not np.any(np.isin(path_res[i], (C.BRAM, C.DSP)))]
+    d_cp = max(wc_delay(i) for i in soft)
+    for i in range(P):
+        r = path_res[i]
+        if np.any(r == C.BRAM):
+            target = d_cp * stats.bram_path_ratio * rng.uniform(0.9, 1.0)
+        elif np.any(r == C.DSP):
+            target = d_cp * rng.uniform(0.5, 0.8)
+        else:
+            continue
+        # drop soft elements (keep hard block) until within target
+        order = [e for e in range(L)
+                 if r[e] >= 0 and r[e] not in (C.BRAM, C.DSP)]
+        rng.shuffle(order)
+        for e in order:
+            if wc_delay(i) <= target:
+                break
+            path_res[i, e] = -1
+
+    nl = Netlist(
+        name=stats.name, m=m, n=n, used=used, total=total, tile_act=tile_act,
+        path_res=path_res, path_tile=path_tile, f_base_mhz=stats.f_mhz,
+        n_luts=stats.n_luts, n_brams=stats.n_brams, n_dsps=stats.n_dsps,
+    )
+    # calibrate absolute delay so worst-case CP matches the published f_max
+    d_raw = float(crit_delay(lib, nl.as_jax(),
+                             jnp.full((n_tiles,), C.T_MAX), C.V_CORE_NOM,
+                             C.V_BRAM_NOM))
+    nl.delay_scale = (1000.0 / stats.f_mhz) / d_raw
+    return nl

@@ -1,0 +1,115 @@
+"""Timing-speculative voltage over-scaling (§III-D) + error model.
+
+For a violation budget gamma >= 1, Algorithm 1's timing constraint is relaxed
+to ``delay <= gamma * d_worst`` while the clock stays at d_worst — the
+obtained voltages are optimal for that allowed violation (the paper's flow).
+
+The post-P&R *timing simulation* is replaced by a TPU-idiomatic functional
+error model (see DESIGN.md §2): gate-level simulation of an FPGA netlist
+becomes an error-injection profile derived from the violating-path population:
+
+- a path p with delay d_p(V, T) > d_worst produces an erroneous capture when
+  it is exercised (prob = its toggle activity),
+- the *depth* of violation determines which accumulator bits are wrong:
+  small overshoots corrupt only the last-arriving (high-order / carry) bits,
+  matching ThunderVolt/FATE observations on systolic MACs [43,48].
+
+``error_profile`` returns per-bit flip probabilities for a W-bit accumulator;
+``kernels/overscale_matmul`` (and its ref) consume it during app inference.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import characterization as C
+from repro.core import netlist as NL
+from repro.core import thermal
+from repro.core.netlist import Netlist
+from repro.core.voltage_scaling import T_GUARD, _pair_grids, _search, baseline_power
+
+
+@dataclass
+class OverscaleResult:
+    gamma: float
+    v_core: float
+    v_bram: float
+    power_mw: float
+    baseline_mw: float
+    saving: float
+    frac_violating: float  # activity-weighted fraction of paths over d_worst
+    mean_overshoot: float  # mean (d_p/d_worst - 1)+ over violating paths
+    bit_probs: np.ndarray  # (32,) per-bit flip probability per MAC
+    t_junct: float = 0.0
+
+
+def run(netlist: Netlist, gamma: float, t_amb: float = 40.0,
+        act_in: float = 1.0,
+        tc: thermal.ThermalConfig = thermal.ThermalConfig(theta_ja=12.0),
+        lib: Optional[C.DeviceLibrary] = None,
+        delta_t: float = 0.1, max_iters: int = 8) -> OverscaleResult:
+    """Algorithm 1 with relaxed constraint gamma * d_worst."""
+    lib = lib or C.default_library()
+    nlj = netlist.as_jax()
+    n_tiles = netlist.n_tiles
+    d_worst = float(NL.crit_delay(
+        lib, nlj, jnp.full((n_tiles,), C.T_MAX), C.V_CORE_NOM, C.V_BRAM_NOM))
+    f_ghz = 1.0 / d_worst  # clock unchanged: violations, not slowdown
+    _, _, vc_flat, vb_flat = _pair_grids()
+
+    T = jnp.full((n_tiles,), float(t_amb))
+    vc = vb = None
+    for _ in range(max_iters):
+        vc, vb = _search(lib, nlj, T, f_ghz, act_in, d_worst * gamma,
+                         vc_flat, vb_flat)
+        lkg, dyn = NL.tile_power(lib, nlj, T, vc, vb, f_ghz, act_in)
+        T_new = thermal.solve(lkg + dyn, netlist.m, netlist.n, t_amb, tc)
+        done = float(jnp.max(jnp.abs(T_new - T))) < delta_t
+        T = T_new
+        if done:
+            break
+    power = float(jnp.sum(lkg) + jnp.sum(dyn))
+    base, _ = baseline_power(netlist, t_amb, act_in, tc, lib)
+
+    frac, overshoot, bit_probs = error_profile(
+        lib, nlj, netlist, T, float(vc), float(vb), d_worst, act_in)
+    return OverscaleResult(
+        gamma=gamma, v_core=float(vc), v_bram=float(vb), power_mw=power,
+        baseline_mw=base, saving=1.0 - power / base,
+        frac_violating=frac, mean_overshoot=overshoot, bit_probs=bit_probs,
+        t_junct=float(jnp.mean(T)))
+
+
+def error_profile(lib, nlj, netlist: Netlist, T_tiles, v_core, v_bram,
+                  d_worst, act_in, word_bits: int = 32):
+    """Violating-path population -> per-bit flip probabilities.
+
+    Bits [word_bits-CARRY_BITS, word_bits) are the carry/MSB tail that the
+    last-arriving signals feed; a violation of depth x (= d_p/d_worst - 1)
+    corrupts the top ceil(x / X_FULL * CARRY_BITS) of them.
+    """
+    CARRY_BITS = 12
+    X_FULL = 0.40  # overshoot at which the whole carry tail is corrupt
+    d = np.asarray(NL.path_delays(lib, nlj, T_tiles + T_GUARD, v_core, v_bram))
+    v = d / d_worst - 1.0
+    viol = v > 0
+    frac = float(viol.mean())
+    overshoot = float(v[viol].mean()) if viol.any() else 0.0
+
+    # per-path capture probability: exercised with internal activity
+    act = float(C.internal_activity(act_in))
+    bit_probs = np.zeros(word_bits)
+    if viol.any():
+        for x in v[viol]:
+            depth = min(int(np.ceil(x / X_FULL * CARRY_BITS)), CARRY_BITS)
+            lo = word_bits - depth
+            bit_probs[lo:] += act / len(d)
+    return frac, overshoot, np.clip(bit_probs, 0.0, 1.0)
+
+
+def sweep(netlist: Netlist, gammas, **kw) -> List[OverscaleResult]:
+    return [run(netlist, float(g), **kw) for g in gammas]

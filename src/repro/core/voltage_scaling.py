@@ -1,0 +1,192 @@
+"""Algorithm 1 — Thermal-Aware Voltage Selection (the paper's core flow).
+
+Fixed-point loop:
+  1. d_worst = T(netlist, T_MAX, V_nom)   # STA worst case; guardbands intact
+  2. given the current per-tile temperature estimate, pick the
+     (V_core, V_bram) pair minimizing P_lkg + P_dyn subject to
+     crit_delay(netlist, T_grid, V_core, V_bram) <= d_worst
+  3. run the thermal solver on the resulting per-tile power
+  4. repeat until ||dT||_inf < delta_T
+
+The (V_core x V_bram) search is fully vectorized (vmap over the voltage
+grid); after the first iteration the search can be restricted to the
+neighbourhood of the previous solution (the paper's O(1) refinement) — both
+modes are implemented and timed.
+
+Static scheme: run at the worst-case ambient + activity -> one (V_core,
+V_bram). Dynamic scheme: precompute a T_amb -> (V_core, V_bram) lookup table
+for the on-line TSD-driven controller (paper §III-B).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import characterization as C
+from repro.core import netlist as NL
+from repro.core import thermal
+from repro.core.netlist import Netlist
+
+V_CORE_GRID = np.round(np.arange(0.55, 0.801, 0.01), 3)
+V_BRAM_GRID = np.round(np.arange(0.55, 0.951, 0.01), 3)
+
+
+@dataclass
+class IterRecord:
+    it: int
+    v_core: float
+    v_bram: float
+    power_mw: float
+    t_junct: float
+    wall_s: float
+
+
+@dataclass
+class VSResult:
+    v_core: float
+    v_bram: float
+    power_mw: float
+    baseline_mw: float
+    saving: float
+    t_junct_mean: float
+    t_junct_max: float
+    d_worst_ns: float
+    trace: List[IterRecord] = field(default_factory=list)
+    converged: bool = True
+
+
+def _pair_grids(v_core_grid=None, v_bram_grid=None):
+    vc = jnp.asarray(v_core_grid if v_core_grid is not None else V_CORE_GRID,
+                     jnp.float32)
+    vb = jnp.asarray(v_bram_grid if v_bram_grid is not None else V_BRAM_GRID,
+                     jnp.float32)
+    VC, VB = jnp.meshgrid(vc, vb, indexing="ij")
+    return vc, vb, VC.reshape(-1), VB.reshape(-1)
+
+
+T_GUARD = 2.0  # degC guard on timing eval (TSD error / spatial gradients, §III-B)
+
+
+def _search(lib, nlj, T_tiles, f_ghz, act_in, d_worst, vc_flat, vb_flat):
+    """Min-power feasible pair over the (flattened) voltage grid."""
+
+    def eval_pair(vc, vb):
+        d = NL.crit_delay(lib, nlj, T_tiles + T_GUARD, vc, vb)
+        lkg, dyn = NL.tile_power(lib, nlj, T_tiles, vc, vb, f_ghz, act_in)
+        return d, jnp.sum(lkg) + jnp.sum(dyn)
+
+    d_all, p_all = jax.vmap(eval_pair)(vc_flat, vb_flat)
+    feasible = d_all <= d_worst * (1.0 + 1e-6)
+    p_masked = jnp.where(feasible, p_all, jnp.inf)
+    idx = jnp.argmin(p_masked)
+    any_feasible = jnp.any(feasible)
+    # fallback: nominal voltages (always feasible by construction of d_worst)
+    vc = jnp.where(any_feasible, vc_flat[idx], C.V_CORE_NOM)
+    vb = jnp.where(any_feasible, vb_flat[idx], C.V_BRAM_NOM)
+    return vc, vb
+
+
+_search_jit = jax.jit(_search, static_argnums=())
+
+
+def run(netlist: Netlist, t_amb: float, act_in: float = 1.0,
+        tc: thermal.ThermalConfig = thermal.ThermalConfig(),
+        lib: Optional[C.DeviceLibrary] = None,
+        delta_t: float = 0.1, max_iters: int = 10,
+        boundary_search: bool = True) -> VSResult:
+    """Algorithm 1. ``act_in``: worst-case primary-input activity."""
+    lib = lib or C.default_library()
+    nlj = netlist.as_jax()
+    n_tiles = netlist.n_tiles
+
+    d_worst = float(NL.crit_delay(
+        lib, nlj, jnp.full((n_tiles,), C.T_MAX), C.V_CORE_NOM, C.V_BRAM_NOM))
+    f_ghz = 1.0 / d_worst  # clock period stays d_worst throughout
+
+    vc_g, vb_g, vc_flat, vb_flat = _pair_grids()
+    T = jnp.full((n_tiles,), float(t_amb))
+    trace: List[IterRecord] = []
+    vc = vb = None
+    converged = False
+
+    for it in range(max_iters):
+        t0 = time.time()
+        if it > 0 and boundary_search:
+            # O(1) refinement: +-20 mV window around the previous solution
+            sel_c = jnp.asarray(
+                [v for v in np.asarray(vc_g) if abs(v - vc_prev) <= 0.021],
+                jnp.float32)
+            sel_b = jnp.asarray(
+                [v for v in np.asarray(vb_g) if abs(v - vb_prev) <= 0.021],
+                jnp.float32)
+            VC, VB = jnp.meshgrid(sel_c, sel_b, indexing="ij")
+            vc, vb = _search(lib, nlj, T, f_ghz, act_in, d_worst,
+                             VC.reshape(-1), VB.reshape(-1))
+        else:
+            vc, vb = _search(lib, nlj, T, f_ghz, act_in, d_worst,
+                             vc_flat, vb_flat)
+        vc_prev, vb_prev = float(vc), float(vb)
+        lkg, dyn = NL.tile_power(lib, nlj, T, vc, vb, f_ghz, act_in)
+        T_new = thermal.solve(lkg + dyn, netlist.m, netlist.n, t_amb, tc)
+        p_total = float(jnp.sum(lkg) + jnp.sum(dyn))
+        trace.append(IterRecord(it + 1, vc_prev, vb_prev, p_total,
+                                float(jnp.mean(T_new)), time.time() - t0))
+        dT = float(jnp.max(jnp.abs(T_new - T)))
+        T = T_new
+        if dT < delta_t:
+            converged = True
+            break
+
+    # baseline: nominal voltages, same thermal fixed point
+    baseline_mw, T_base = baseline_power(netlist, t_amb, act_in, tc, lib)
+
+    return VSResult(
+        v_core=vc_prev, v_bram=vb_prev, power_mw=trace[-1].power_mw,
+        baseline_mw=baseline_mw,
+        saving=1.0 - trace[-1].power_mw / baseline_mw,
+        t_junct_mean=float(jnp.mean(T)), t_junct_max=float(jnp.max(T)),
+        d_worst_ns=d_worst, trace=trace, converged=converged,
+    )
+
+
+def baseline_power(netlist: Netlist, t_amb: float, act_in: float,
+                   tc: thermal.ThermalConfig, lib=None,
+                   max_iters: int = 10, delta_t: float = 0.1):
+    """Nominal-voltage power at its own thermal fixed point."""
+    lib = lib or C.default_library()
+    nlj = netlist.as_jax()
+    n_tiles = netlist.n_tiles
+    d_worst = float(NL.crit_delay(
+        lib, nlj, jnp.full((n_tiles,), C.T_MAX), C.V_CORE_NOM, C.V_BRAM_NOM))
+    f_ghz = 1.0 / d_worst
+    T = jnp.full((n_tiles,), float(t_amb))
+    for _ in range(max_iters):
+        lkg, dyn = NL.tile_power(lib, nlj, T, C.V_CORE_NOM, C.V_BRAM_NOM,
+                                 f_ghz, act_in)
+        T_new = thermal.solve(lkg + dyn, netlist.m, netlist.n, t_amb, tc)
+        if float(jnp.max(jnp.abs(T_new - T))) < delta_t:
+            T = T_new
+            break
+        T = T_new
+    lkg, dyn = NL.tile_power(lib, nlj, T, C.V_CORE_NOM, C.V_BRAM_NOM,
+                             f_ghz, act_in)
+    return float(jnp.sum(lkg) + jnp.sum(dyn)), T
+
+
+def dynamic_lut(netlist: Netlist, t_ambs, act_in: float = 1.0,
+                tc: thermal.ThermalConfig = thermal.ThermalConfig(),
+                lib=None) -> Dict[float, Tuple[float, float]]:
+    """The on-line scheme's lookup table: T_amb -> (V_core, V_bram).
+
+    Loaded at configure time; the TSD reading (1 ms resolution, paper [38])
+    indexes it and the on-chip regulator applies the pair (paper [39])."""
+    out = {}
+    for t in t_ambs:
+        r = run(netlist, float(t), act_in, tc, lib)
+        out[float(t)] = (r.v_core, r.v_bram)
+    return out

@@ -1,0 +1,44 @@
+"""The 10 industrial VTR benchmarks used by the paper (statistics).
+
+The paper selects VTR-repository benchmarks "from a wide variety of
+applications (vision, math, communication, etc.), containing single-/dual-port
+memory and DSP blocks, with an average of over 23,800 6-input LUTs (maximum
+over 106K)". Named in the paper: mkDelayWorker (6,128 LUTs, 164 BRAM,
+92x92 grid, 71.6 MHz), LU8PEEng (CP 21x the longest BRAM path), raygentop,
+or1200, mkPktMerge. The remaining five below complete the standard VTR set;
+LUT/BRAM/DSP counts follow the published VTR 7.0 characterization tables.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.netlist import BenchStats, Netlist, generate
+
+BENCHES: List[BenchStats] = [
+    BenchStats("bgm", 32384, 0, 11, 65.0, "logic"),
+    BenchStats("blob_merge", 6019, 0, 0, 90.0, "routing"),
+    BenchStats("boundtop", 2921, 1, 0, 120.0, "mixed"),
+    BenchStats("LU8PEEng", 21954, 45, 8, 55.0, "logic", bram_path_ratio=1 / 21),
+    BenchStats("mcml", 106069, 38, 27, 50.0, "logic"),
+    BenchStats("mkDelayWorker32B", 6128, 164, 0, 71.6, "memory",
+               grid=(92, 92), bram_path_ratio=0.96),
+    BenchStats("mkPktMerge", 231, 15, 0, 160.0, "memory", bram_path_ratio=0.90),
+    BenchStats("or1200", 2963, 2, 1, 95.0, "routing"),
+    BenchStats("raygentop", 1884, 1, 18, 110.0, "mixed"),
+    BenchStats("stereovision0", 11462, 0, 0, 100.0, "routing"),
+]
+
+BY_NAME: Dict[str, BenchStats] = {b.name: b for b in BENCHES}
+
+_cache: Dict[str, Netlist] = {}
+
+
+def load(name: str, seed: int = 0) -> Netlist:
+    key = f"{name}:{seed}"
+    if key not in _cache:
+        _cache[key] = generate(BY_NAME[name], seed)
+    return _cache[key]
+
+
+def load_all(seed: int = 0) -> Dict[str, Netlist]:
+    return {b.name: load(b.name, seed) for b in BENCHES}

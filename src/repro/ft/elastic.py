@@ -1,0 +1,49 @@
+"""Elastic scaling: rebuild mesh/plan on device-count change + reshard.
+
+Flow (exercised by tests on the CPU host mesh):
+  1. a worker dies -> Heartbeat reports a smaller alive set
+  2. ``choose_mesh_shape`` picks the largest usable (data, model) grid
+  3. params/opt state are restored from the latest checkpoint with the NEW
+     plan's shardings (CheckpointManager.restore is mesh-agnostic)
+  4. the data pipeline continues from the restored step (deterministic skip)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.sharding.plan import Plan, make_plan
+
+
+def choose_mesh_shape(n_devices: int, prefer_model: int = 1) -> Tuple[int, int]:
+    """Largest (data, model) grid with model | prefer_model preserved."""
+    model = prefer_model
+    while model > 1 and (n_devices % model or model > n_devices):
+        model //= 2
+    data = n_devices // model
+    return data, model
+
+
+def rebuild(cfg: ModelConfig, n_devices: int,
+            prefer_model: int = 1) -> Tuple[Mesh, Plan]:
+    devs = jax.devices()[:n_devices]
+    data, model = choose_mesh_shape(n_devices, prefer_model)
+    import numpy as np
+    mesh = Mesh(np.array(devs).reshape(data, model), ("data", "model"))
+    return mesh, make_plan(cfg, mesh)
+
+
+def rescale(cfg: ModelConfig, ckpt_mgr, model_obj, n_devices: int,
+            prefer_model: int = 1, step: Optional[int] = None):
+    """Restore (params) from checkpoint onto a rebuilt mesh; returns
+    (mesh, plan, params, restored_step)."""
+    mesh, plan = rebuild(cfg, n_devices, prefer_model)
+    meta = model_obj.param_meta()
+    from repro.models import params as pm
+    like = pm.abstract(meta, cfg.param_dtype)
+    shardings = plan.param_shardings(meta)
+    params, got_step = ckpt_mgr.restore(like, step=step, shardings=shardings)
+    return mesh, plan, params, got_step

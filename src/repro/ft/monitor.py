@@ -1,0 +1,100 @@
+"""Fault tolerance: heartbeats, straggler detection, failure/retry driver.
+
+At 1000+ nodes the interesting failures are partial: one slow chip (thermal
+throttling, ECC retries), one dead host, one hung collective. The pieces:
+
+- ``Heartbeat``: per-worker liveness registry with timeout -> dead-set.
+- ``StragglerDetector``: rolling step-time stats; flags outliers beyond
+  ``threshold`` x median. Mitigations are pluggable; the thermal tie-in
+  (core/runtime.py) BOOSTS the hot chip's rail (performance-preserving, the
+  paper's knob in reverse) before resorting to rebalancing.
+- ``retry_step``: bounded-retry wrapper around a train step for transient
+  failures, with checkpoint-restore escalation.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+
+class Heartbeat:
+    def __init__(self, timeout_s: float = 60.0):
+        self.timeout_s = timeout_s
+        self.last_seen: Dict[str, float] = {}
+
+    def beat(self, worker: str, t: Optional[float] = None):
+        self.last_seen[worker] = time.time() if t is None else t
+
+    def dead(self, now: Optional[float] = None) -> Set[str]:
+        now = time.time() if now is None else now
+        return {w for w, t in self.last_seen.items()
+                if now - t > self.timeout_s}
+
+    def alive(self, now: Optional[float] = None) -> Set[str]:
+        return set(self.last_seen) - self.dead(now)
+
+
+@dataclass
+class StragglerEvent:
+    worker: str
+    step: int
+    step_time: float
+    median: float
+    ratio: float
+
+
+class StragglerDetector:
+    def __init__(self, threshold: float = 1.5, window: int = 32,
+                 min_samples: int = 8):
+        self.threshold = threshold
+        self.window = window
+        self.min_samples = min_samples
+        self.times: Dict[str, deque] = {}
+        self.events: List[StragglerEvent] = []
+
+    def record(self, worker: str, step: int, step_time: float):
+        dq = self.times.setdefault(worker, deque(maxlen=self.window))
+        dq.append(step_time)
+        allt = sorted(t for d in self.times.values() for t in d)
+        if len(allt) < self.min_samples:
+            return None
+        median = allt[len(allt) // 2]
+        if step_time > self.threshold * median:
+            ev = StragglerEvent(worker, step, step_time, median,
+                                step_time / median)
+            self.events.append(ev)
+            return ev
+        return None
+
+
+class TransientError(RuntimeError):
+    pass
+
+
+def retry_step(fn: Callable, *args, max_retries: int = 3,
+               on_failure: Optional[Callable[[int, Exception], None]] = None,
+               **kw):
+    """Run ``fn`` with bounded retries on TransientError; re-raise otherwise."""
+    for attempt in range(max_retries + 1):
+        try:
+            return fn(*args, **kw)
+        except TransientError as e:  # noqa: PERF203
+            if on_failure:
+                on_failure(attempt, e)
+            if attempt == max_retries:
+                raise
+    raise AssertionError("unreachable")
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples: fail step k once."""
+    fail_at: Set[int] = field(default_factory=set)
+    seen: Set[int] = field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.seen:
+            self.seen.add(step)
+            raise TransientError(f"injected failure at step {step}")

@@ -1,0 +1,139 @@
+"""Error-injected int8 matmul — the voltage over-scaling timing simulator.
+
+TPU adaptation of the paper's post-P&R timing simulation (§III-D): instead of
+gate-level simulating an FPGA netlist, we inject the *consequence* of timing
+violations — bit flips in the 32-bit MAC accumulators, MSB/carry-weighted —
+directly into the systolic matmul. The per-bit flip profile comes from
+core/overscaling.error_profile.
+
+Kernel: C[i,j] = sum_k A[i,k] * B[k,j] (int8 x int8 -> int32), then per
+output element: with prob p_total flip one bit drawn from the bit-probability
+distribution. Randomness enters as two uint32 planes (u_gate, u_bit) generated
+outside (keeps the kernel deterministic and oracle-checkable).
+
+BlockSpec tiling: (BM x BK) x (BK x BN) MXU-aligned blocks, K-major grid with
+an int32 VMEM accumulator scratch (revisited output block pattern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM, BN, BK = 128, 128, 128
+
+
+def _kernel(a_ref, b_ref, gate_ref, bit_ref, cdf_ref, c_ref, acc_ref, *,
+            n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _finalize():
+        acc = acc_ref[...]
+        gate = gate_ref[...]  # uint32
+        ubit = bit_ref[...]  # uint32
+        cdf = cdf_ref[...]  # (33,) float32: [0, cdf..., p_total at end]
+        p_total = cdf[-1]
+        # flip gate: u < p_total (u uniform in [0,1))
+        u = gate.astype(jnp.float32) * (1.0 / 4294967296.0)
+        flip = u < p_total
+        # bit index: inverse-cdf lookup of second uniform scaled to p_total
+        u2 = ubit.astype(jnp.float32) * (1.0 / 4294967296.0) * p_total
+        # cdf[1:33] are cumulative probs per bit; count how many are < u2
+        bit_idx = jnp.sum(
+            (u2[..., None] >= cdf[None, None, 1:]).astype(jnp.int32), axis=-1)
+        bit_idx = jnp.clip(bit_idx, 0, 31)
+        mask = jnp.where(flip, jnp.left_shift(jnp.int32(1), bit_idx), 0)
+        c_ref[...] = jax.lax.bitwise_xor(acc, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def overscale_matmul(a, b, u_gate, u_bit, cdf, *, interpret: bool = True):
+    """a:(M,K) int8, b:(K,N) int8, u_gate/u_bit:(M,N) uint32,
+    cdf:(33,) float32 -> (M,N) int32 with injected errors."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    Mp, Np, Kp = (-(-M // BM) * BM), (-(-N // BN) * BN), (-(-K // BK) * BK)
+    a = jnp.pad(a, ((0, Mp - M), (0, Kp - K)))
+    b = jnp.pad(b, ((0, Kp - K), (0, Np - N)))
+    u_gate = jnp.pad(u_gate, ((0, Mp - M), (0, Np - N)))
+    u_bit = jnp.pad(u_bit, ((0, Mp - M), (0, Np - N)))
+    n_k = Kp // BK
+    grid = (Mp // BM, Np // BN, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+            pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+            pl.BlockSpec((33,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.int32)],
+        interpret=interpret,
+    )(a, b, u_gate, u_bit, cdf)
+    return out[:M, :N]
+
+
+def bit_probs_to_cdf(bit_probs) -> jnp.ndarray:
+    p = jnp.asarray(bit_probs, jnp.float32)
+    cdf = jnp.concatenate([jnp.zeros((1,), jnp.float32), jnp.cumsum(p)])
+    return cdf  # (33,); cdf[-1] = p_total
+
+
+# --- quantization helpers + app-facing wrapper --------------------------------
+
+def quantize(x, bits: int = 8):
+    scale = jnp.max(jnp.abs(x)) / (2 ** (bits - 1) - 1) + 1e-9
+    q = jnp.clip(jnp.round(x / scale), -(2 ** (bits - 1)), 2 ** (bits - 1) - 1)
+    return q.astype(jnp.int8), scale
+
+
+def make_int8_error_matmul(bit_probs, key, use_pallas: bool = False):
+    """Returns matmul(a_f32, b_f32) -> f32 that quantizes, runs the
+    error-injected int8 matmul (ref by default; pallas-interpret opt-in),
+    and dequantizes with clipping (the fixed-point requantization step)."""
+    from repro.kernels import ref as kref
+    cdf = bit_probs_to_cdf(bit_probs)
+    counter = [0]
+
+    def mm(a, b):
+        counter[0] += 1
+        k1, k2 = jax.random.split(jax.random.fold_in(key, counter[0]))
+        qa, sa = quantize(a)
+        qb, sb = quantize(b)
+        u_gate = jax.random.bits(k1, a.shape[:1] + b.shape[1:], jnp.uint32)
+        u_bit = jax.random.bits(k2, a.shape[:1] + b.shape[1:], jnp.uint32)
+        if use_pallas:
+            acc = overscale_matmul(qa, qb, u_gate, u_bit, cdf)
+        else:
+            acc = kref.overscale_matmul_ref(qa, qb, u_gate, u_bit, cdf)
+        # requantize with clipping at the CALIBRATED activation range (the
+        # fixed-point pipeline's output scale): a flipped carry/MSB bit
+        # saturates instead of exploding — the mechanism behind DNN tolerance.
+        clean = jax.lax.dot_general(
+            qa.astype(jnp.int32), qb.astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+        lim = jnp.quantile(jnp.abs(clean.astype(jnp.float32)), 0.9995)
+        out = jnp.clip(acc.astype(jnp.float32), -lim, lim) * sa * sb
+        return out
+
+    return mm

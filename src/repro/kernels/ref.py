@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+One reference per kernel, written with plain jnp ops (no pallas):
+- overscale_matmul_ref: int8 matmul + identical error-injection math
+- thermal_stencil_ref: K Jacobi sweeps of the 5-point thermal stencil
+- flash_attention_ref: naive softmax(QK^T)V with causal mask
+- mamba_scan_ref: delegates to the model-level chunked SSD implementation
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def overscale_matmul_ref(a, b, u_gate, u_bit, cdf):
+    acc = jax.lax.dot_general(
+        a.astype(jnp.int32), b.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    p_total = cdf[-1]
+    u = u_gate.astype(jnp.float32) * (1.0 / 4294967296.0)
+    flip = u < p_total
+    u2 = u_bit.astype(jnp.float32) * (1.0 / 4294967296.0) * p_total
+    bit_idx = jnp.sum((u2[..., None] >= cdf[None, None, 1:]).astype(jnp.int32),
+                      axis=-1)
+    bit_idx = jnp.clip(bit_idx, 0, 31)
+    mask = jnp.where(flip, jnp.left_shift(jnp.int32(1), bit_idx), 0)
+    return jax.lax.bitwise_xor(acc, mask)
+
+
+def thermal_stencil_ref(T, P, diag, g_lat, g_v_tamb, iters: int):
+    """T,P,diag:(m,n); iters Jacobi sweeps."""
+    def nbr(T):
+        up = jnp.pad(T[1:, :], ((0, 1), (0, 0)))
+        dn = jnp.pad(T[:-1, :], ((1, 0), (0, 0)))
+        lf = jnp.pad(T[:, 1:], ((0, 0), (0, 1)))
+        rt = jnp.pad(T[:, :-1], ((0, 0), (1, 0)))
+        return up + dn + lf + rt
+
+    def body(_, T):
+        return (P + g_v_tamb + g_lat * nbr(T)) / diag
+
+    return jax.lax.fori_loop(0, iters, body, T)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q,k,v:(S,D)/(T,D) single head."""
+    S, D = q.shape
+    T = k.shape[0]
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) / jnp.sqrt(D)
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return (w @ v.astype(jnp.float32)).astype(v.dtype)
+
+
+def mamba_scan_ref(xh, dt, A, B, C, chunk: int):
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(xh, dt, A, B, C, chunk)

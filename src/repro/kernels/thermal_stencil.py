@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused multi-sweep Jacobi thermal stencil.
+
+Hot loop of the HotSpot-style steady-state solver (core/thermal.py). The
+FPGA/TPU thermal grids are small (92x92 .. 256x256 -> <= 256 KB fp32), so the
+TPU-native tiling is: keep the WHOLE grid resident in VMEM and fuse K Jacobi
+sweeps inside one ``pallas_call`` (a ``fori_loop`` in-kernel), cutting
+HBM<->VMEM round-trips by K versus K separate XLA iterations. This is the
+hardware-adaptation analogue of blocking for cache: VMEM (~16 MB) dwarfs the
+working set, so the bottleneck is launch/HBM overhead, not compute.
+
+Block layout: grid=(1,), whole-array BlockSpecs in VMEM; the neighbour sum is
+computed with in-kernel shifts (jnp.pad/slice lower to vector ops on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(T_ref, P_ref, diag_ref, o_ref, *, g_lat: float, g_v_tamb: float,
+            iters: int):
+    P = P_ref[...]
+    diag = diag_ref[...]
+
+    def nbr(T):
+        up = jnp.pad(T[1:, :], ((0, 1), (0, 0)))
+        dn = jnp.pad(T[:-1, :], ((1, 0), (0, 0)))
+        lf = jnp.pad(T[:, 1:], ((0, 0), (0, 1)))
+        rt = jnp.pad(T[:, :-1], ((0, 0), (1, 0)))
+        return up + dn + lf + rt
+
+    def body(_, T):
+        return (P + g_v_tamb + g_lat * nbr(T)) / diag
+
+    o_ref[...] = jax.lax.fori_loop(0, iters, body, T_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iters", "g_lat", "g_v_tamb", "interpret"))
+def thermal_stencil(T, P, diag, *, g_lat: float, g_v_tamb: float,
+                    iters: int = 64, interpret: bool = True):
+    """K fused Jacobi sweeps. T,P,diag: (m,n) fp32 -> (m,n) fp32."""
+    m, n = T.shape
+    spec = pl.BlockSpec((m, n), lambda: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, g_lat=float(g_lat),
+                          g_v_tamb=float(g_v_tamb), iters=iters),
+        grid=(),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(T.astype(jnp.float32), P.astype(jnp.float32), diag.astype(jnp.float32))

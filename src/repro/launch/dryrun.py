@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch import inputs as I
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.models import params as pm
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.sharding.plan import make_plan
+from repro.train.optimizer import make_optimizer
+from repro.train.step import make_train_step
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def choose_n_accum(cfg: ModelConfig, shape: ShapeSpec, dp_total: int) -> int:
+    if shape.kind != "train":
+        return 1
+    per_dp = max(shape.global_batch // dp_total, 1)
+    seqs_per_mb = 1 if cfg.d_model >= 4096 else 4
+    return max(per_dp // seqs_per_mb, 1)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, serve_dtype="bfloat16"):
+    """Lower one (arch, shape) on ``mesh``; returns (lowered, meta_info)."""
+    cfg = registry.get(arch)
+    shape = registry.get_shape(shape_name)
+    dp_total = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp_total *= mesh.shape[a]
+
+    sp = os.environ.get("REPRO_SP", "") == "1"  # §Perf knob: sequence parallel
+    if shape.kind == "train":
+        plan = make_plan(cfg, mesh, sequence_parallel=sp)
+        model = Model(cfg, plan)
+        meta = model.param_meta()
+        opt = make_optimizer(cfg)
+        n_accum = choose_n_accum(cfg, shape, dp_total)
+        step_fn = make_train_step(model, opt, n_accum=n_accum)
+        params_abs = pm.abstract(meta, cfg.param_dtype)
+        opt_abs = pm.abstract(opt.state_meta(meta))
+        batch_abs = I.train_input_specs(cfg, shape)
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+        param_sh = plan.param_shardings(meta)
+        opt_sh = _ns(mesh, plan.param_specs(opt.state_meta(meta)))
+        batch_sh = _ns(mesh, I.train_input_shardings(cfg, plan))
+        rep = NamedSharding(mesh, P())
+        in_sh = (param_sh, opt_sh, batch_sh, rep)
+        out_sh = (param_sh, opt_sh, None)
+
+        with mesh:
+            lowered = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=(0, 1)) \
+                .lower(params_abs, opt_abs, batch_abs, step_abs)
+        info = {"kind": "train", "n_accum": n_accum,
+                "n_params": pm.n_params(meta)}
+        return lowered, info
+
+    # serving paths use bf16 weights
+    cfg_srv = cfg.replace(param_dtype=serve_dtype)
+    if shape.kind == "prefill":
+        plan = make_plan(cfg_srv, mesh)
+        model = Model(cfg_srv, plan)
+        meta = model.param_meta()
+        fn = make_prefill_step(model, max_len=shape.seq_len)
+        params_abs = pm.abstract(meta, serve_dtype)
+        batch_abs = I.prefill_input_specs(cfg_srv, shape)
+        in_sh = (plan.param_shardings(meta),
+                 _ns(mesh, I.prefill_input_shardings(cfg_srv, plan)))
+        cache_sh = _ns(mesh, model.cache_specs())
+        out_sh = (None, cache_sh)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh) \
+                .lower(params_abs, batch_abs)
+        return lowered, {"kind": "prefill", "n_params": pm.n_params(meta)}
+
+    # decode
+    replicate_batch = shape.global_batch % dp_total != 0
+    seq_axis = "data" if replicate_batch else None  # long_500k: shard cache seq
+    plan = make_plan(cfg_srv, mesh, replicate_batch=replicate_batch)
+    model = Model(cfg_srv, plan)
+    meta = model.param_meta()
+    fn = make_decode_step(model)
+    params_abs = pm.abstract(meta, serve_dtype)
+    cache_abs, tok_abs, pos_abs = I.decode_input_specs(cfg_srv, shape, model)
+    cache_sh, tok_sh, pos_sh = I.decode_input_shardings(
+        cfg_srv, plan, model, seq_axis=seq_axis)
+    in_sh = (plan.param_shardings(meta), _ns(mesh, cache_sh),
+             NamedSharding(mesh, tok_sh), NamedSharding(mesh, pos_sh))
+    out_sh = (None, _ns(mesh, cache_sh))
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=(1,)) \
+            .lower(params_abs, cache_abs, tok_abs, pos_abs)
+    return lowered, {"kind": "decode", "n_params": pm.n_params(meta)}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             save_hlo: Optional[str] = None) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    try:
+        lowered, info = lower_cell(arch, shape_name, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        n_dev = mesh.size
+        rec.update(info)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 1),
+            "compile_s": round(t2 - t1, 1),
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "flops_hlo": (cost or {}).get("flops"),
+            "bytes_hlo": (cost or {}).get("bytes accessed"),
+        })
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(compiled.as_text())
+            rec["hlo_path"] = save_hlo
+        print(f"[dryrun] {arch} {shape_name} {mesh_kind}: OK "
+              f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s, "
+              f"args/dev {rec['argument_bytes_per_device']}, "
+              f"temp/dev {rec['temp_bytes_per_device']})")
+        print(f"[dryrun]   memory_analysis: {mem}")
+        print(f"[dryrun]   cost_analysis: flops={rec['flops_hlo']} "
+              f"bytes={rec['bytes_hlo']}")
+    except Exception as e:  # noqa
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        print(f"[dryrun] {arch} {shape_name} {mesh_kind}: FAIL {rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--hlo-dir", default=None)
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = list(registry.all_cells())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        for mk in meshes:
+            hlo = None
+            if args.hlo_dir:
+                os.makedirs(args.hlo_dir, exist_ok=True)
+                hlo = os.path.join(args.hlo_dir, f"{arch}_{shape}_{mk}.hlo")
+            results.append(run_cell(arch, shape, mk, save_hlo=hlo))
+
+    n_ok = sum(r["ok"] for r in results)
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""``input_specs``: ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+train/prefill/decode steps against these. Modality frontends are stubs:
+vlm gets precomputed patch embeddings, audio gets precomputed frame
+embeddings, exactly as the assignment specifies.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.sharding.plan import Plan
+
+
+def _extras(cfg: ModelConfig, batch: int):
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        out["audio_frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    return out
+
+
+def _extras_specs(cfg: ModelConfig, plan: Plan):
+    out: Dict[str, Any] = {}
+    b = plan.batch_axes
+    if cfg.family == "vlm":
+        out["image_embeds"] = P(b, None, None)
+    if cfg.family == "audio":
+        out["audio_frames"] = P(b, None, None)
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        **_extras(cfg, B),
+    }
+    return batch
+
+
+def train_input_shardings(cfg: ModelConfig, plan: Plan):
+    b = plan.batch_axes
+    out = {"tokens": P(b, None), "labels": P(b, None),
+           **_extras_specs(cfg, plan)}
+    return out
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32), **_extras(cfg, B)}
+
+
+def prefill_input_shardings(cfg: ModelConfig, plan: Plan):
+    return {"tokens": P(plan.batch_axes, None), **_extras_specs(cfg, plan)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec, model):
+    """(cache, tokens, pos) stand-ins. Cache capacity = shape.seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = model.cache(B, S, abstract=True)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, pos
+
+
+def decode_input_shardings(cfg: ModelConfig, plan: Plan, model, seq_axis=None):
+    cache_specs = model.cache_specs(seq_axis=seq_axis)
+    return cache_specs, P(plan.batch_axes, None), P()

@@ -1,0 +1,377 @@
+"""Attention: GQA (qk-norm, sliding-window), MLA (+absorbed decode), cross-attn.
+
+KV caches are dicts of arrays with an explicit ``pos_ids`` vector so full and
+ring-buffer (sliding-window) caches share one masking rule:
+    valid(t) = 0 <= pos_ids[t] <= pos  and  pos_ids[t] > pos - window.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamMeta, dense
+from repro.models.layers import apply_rope, rms_norm
+from repro.sharding.plan import Plan
+
+NEG_INF = -1e30
+
+
+# =============================================================================
+# GQA
+# =============================================================================
+
+def gqa_params(cfg: ModelConfig, plan: Plan, cross: bool = False):
+    d, dh = cfg.d_model, cfg.head_dim
+    h, hkv = plan.num_heads, plan.num_kv_heads
+    p = {
+        "wq": ParamMeta((d, h, dh), ("embed", "heads", None), fan_in=d),
+        "wk": ParamMeta((d, hkv, dh), ("embed", "kv_heads", None), fan_in=d),
+        "wv": ParamMeta((d, hkv, dh), ("embed", "kv_heads", None), fan_in=d),
+        "wo": ParamMeta((h, dh, d), ("heads", None, "embed"), fan_in=h * dh),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamMeta((dh,), (None,), init="ones")
+        p["k_norm"] = ParamMeta((dh,), (None,), init="ones")
+    if cross:
+        p["gate"] = ParamMeta((1,), (None,), init="zeros")
+    return p
+
+
+def _qkv(p, x, kv_x, cfg: ModelConfig, plan: Plan):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", kv_x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+BLOCKWISE_THRESHOLD = 8192  # self-attention seqs >= this use blockwise softmax
+# (§Perf iteration 6 tried 4096: REFUTED — at 4k the 2x2 block grid computes
+# the same flops and the scan stacking overhead exceeds the score-matrix
+# saving; blockwise pays off from 8k where scores no longer fit)
+
+
+def _sdpa(q, k, v, mask, plan: Plan):
+    """q:(B,S,H,D) k,v:(B,T,Hkv,D) mask:(B,1,1,S,T) or None -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    q = q.reshape(B, S, Hkv, G, D)
+    # accumulate in f32 via the dot itself — casting inputs would materialize
+    # f32 copies of K (and force an f32 cache carry through the decode scan)
+    scores = jnp.einsum("bshgd,bthd->bhgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgst,bthd->bshgd", w, v)
+    return o.reshape(B, S, H, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def blockwise_sdpa(q, k, v, *, causal: bool, window: int = 0,
+                   q_block: int = 2048, kv_block: int = 2048):
+    """Flash-style online-softmax attention in pure XLA (scan over blocks).
+
+    Never materializes the (S,T) score matrix — per-step live memory is
+    O(q_block × kv_block). Used for long self-attention (32k prefill) where
+    the naive path would need S² score buffers. q:(B,S,H,D), k/v:(B,T,Hkv,D).
+    """
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    Hkv = k.shape[2]
+    G = H // Hkv
+    Dv = v.shape[-1]
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, T)
+    nq, nk = S // q_block, T // kv_block
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    qb = q.reshape(B, nq, q_block, Hkv, G, D)
+    kb = k.reshape(B, nk, kv_block, Hkv, D)
+    vb = v.reshape(B, nk, kv_block, Hkv, Dv)
+
+    def q_step(_, qi_inp):
+        qi, iq = qi_inp  # (B,q_block,Hkv,G,D), scalar block index
+
+        def kv_step(carry, kv_inp):
+            m, l, acc = carry
+            kj, vj, jk = kv_inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj,
+                           preferred_element_type=jnp.float32)
+            s = s * scale
+            qpos = iq * q_block + jnp.arange(q_block)[:, None]
+            kpos = jk * kv_block + jnp.arange(kv_block)[None, :]
+            valid = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                valid &= kpos <= qpos
+            if window:
+                valid &= kpos > qpos - window
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_block, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(v.dtype)  # (B,Hkv,G,q_block,Dv)
+
+    _, outs = jax.lax.scan(
+        q_step, None, (qb.swapaxes(0, 1), jnp.arange(nq)))
+    # outs: (nq, B, Hkv, G, q_block, Dv)
+    out = jnp.moveaxis(outs, 0, 3)  # (B,Hkv,G,nq,q_block,Dv)
+    out = out.reshape(B, Hkv, G, S, Dv).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, S, H, Dv)
+
+
+def causal_mask(S: int, T: int, q_offset, window: int = 0):
+    """(1,1,1,S,T) bool; q position i attends kv position j iff j<=i (+window)."""
+    qi = q_offset + jnp.arange(S)[:, None]
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window:
+        m &= kj > qi - window
+    return m[None, None, None]
+
+
+def gqa_apply(p, x, cfg: ModelConfig, plan: Plan, positions=None,
+              kv_x=None, cross: bool = False, causal: bool = True):
+    """Train/prefill path. x:(B,S,D). Returns (out, kv) — kv for cache seeding."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, x if kv_x is None else kv_x, cfg, plan)
+    if positions is None:
+        positions = jnp.arange(S)[None]
+    if not cross:
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+        mask = (causal_mask(S, k.shape[1], 0, cfg.sliding_window)
+                if causal else None)
+    else:
+        mask = None
+    q = plan.act(q, "batch", None, "heads", None)
+    k = plan.act(k, "batch", None, "kv_heads", None)
+    if not cross and causal and S == k.shape[1] and S >= BLOCKWISE_THRESHOLD:
+        o = blockwise_sdpa(q, k, v, causal=True, window=cfg.sliding_window)
+    else:
+        o = _sdpa(q, k, v, mask, plan)
+    o = jnp.einsum("bshd,hdk->bsk", o, p["wo"].astype(x.dtype))
+    if cross:
+        o = o * jnp.tanh(p["gate"].astype(x.dtype))
+    return o, (k, v)
+
+
+# --- decode ------------------------------------------------------------------
+
+def gqa_cache_init(cfg: ModelConfig, plan: Plan, batch: int, max_len: int, dtype):
+    T = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    hkv, dh = plan.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, T, hkv, dh), dtype),
+        "v": jnp.zeros((batch, T, hkv, dh), dtype),
+        "pos_ids": jnp.full((T,), -1, jnp.int32),
+    }
+
+
+def gqa_cache_abstract(cfg: ModelConfig, plan: Plan, batch: int, max_len: int, dtype):
+    T = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    hkv, dh = plan.num_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, T, hkv, dh), dtype),
+        "v": jax.ShapeDtypeStruct((batch, T, hkv, dh), dtype),
+        "pos_ids": jax.ShapeDtypeStruct((T,), jnp.int32),
+    }
+
+
+def gqa_cache_spec(plan: Plan, seq_axis=None):
+    b = plan.batch_axes
+    kvh = plan.rules.get("kv_heads")
+    from jax.sharding import PartitionSpec as P
+    return {"k": P(b, seq_axis, kvh, None), "v": P(b, seq_axis, kvh, None),
+            "pos_ids": P(seq_axis)}
+
+
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig, plan: Plan):
+    """One-token decode. x:(B,1,D); pos: scalar int32 current position."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(p, x, x, cfg, plan)
+    q = apply_rope(q, jnp.full((1, 1), pos), cfg)
+    k_new = apply_rope(k_new, jnp.full((1, 1), pos), cfg)
+    T = cache["k"].shape[1]
+    slot = pos % T  # ring for SWA; == pos when T == max_len
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    pos_ids = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos_ids"], jnp.array([pos], jnp.int32) * jnp.ones((1,), jnp.int32),
+        slot, axis=0)
+    valid = (pos_ids >= 0) & (pos_ids <= pos)
+    if cfg.sliding_window:
+        valid &= pos_ids > pos - cfg.sliding_window
+    mask = valid[None, None, None, None, :]
+    o = _sdpa(q, k, v, mask, plan)
+    o = jnp.einsum("bshd,hdk->bsk", o, p["wo"].astype(x.dtype))
+    return o, {"k": k, "v": v, "pos_ids": pos_ids}
+
+
+def gqa_seed_cache(cache, kv, prefill_len: int):
+    """Write prefill-time K/V into a decode cache (assumes full, non-ring)."""
+    k, v = kv
+    T = cache["k"].shape[1]
+    S = k.shape[1]
+    if S > T:  # sliding-window cache shorter than prefill: keep the tail
+        k, v = k[:, S - T:], v[:, S - T:]
+        pos = jnp.arange(S - T, S, dtype=jnp.int32)
+        S = T
+    else:
+        pos = jnp.arange(S, dtype=jnp.int32)
+    out = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1),
+        "pos_ids": jax.lax.dynamic_update_slice_in_dim(cache["pos_ids"], pos, 0, 0),
+    }
+    return out
+
+
+# =============================================================================
+# MLA (deepseek-v2): low-rank compressed KV, absorbed decode
+# =============================================================================
+
+def mla_params(cfg: ModelConfig, plan: Plan):
+    d = cfg.d_model
+    h = plan.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qk = nope + rope_d
+    p = {
+        "kv_down": dense(d, cfg.kv_lora_rank + rope_d, "embed", None),
+        "kv_norm": ParamMeta((cfg.kv_lora_rank,), (None,), init="ones"),
+        "k_up": ParamMeta((cfg.kv_lora_rank, h, nope), (None, "heads", None),
+                          fan_in=cfg.kv_lora_rank),
+        "v_up": ParamMeta((cfg.kv_lora_rank, h, vd), (None, "heads", None),
+                          fan_in=cfg.kv_lora_rank),
+        "wo": ParamMeta((h, vd, d), ("heads", None, "embed"), fan_in=h * vd),
+    }
+    if cfg.q_lora_rank:
+        p["q_down"] = dense(d, cfg.q_lora_rank, "embed", None)
+        p["q_norm"] = ParamMeta((cfg.q_lora_rank,), (None,), init="ones")
+        p["q_up"] = ParamMeta((cfg.q_lora_rank, h, qk), (None, "heads", None),
+                              fan_in=cfg.q_lora_rank)
+    else:
+        p["q_up"] = ParamMeta((d, h, qk), ("embed", "heads", None), fan_in=d)
+    return p
+
+
+def _mla_q(p, x, cfg, positions):
+    dt = x.dtype
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = rms_norm(x @ p["q_down"].astype(dt), p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["q_up"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["q_up"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg, dim=rope_d)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, cfg, positions):
+    dt = x.dtype
+    rope_d = cfg.qk_rope_head_dim
+    kvd = x @ p["kv_down"].astype(dt)
+    c_kv = rms_norm(kvd[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kvd[..., cfg.kv_lora_rank:][:, :, None, :]  # (B,T,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg, dim=rope_d)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_apply(p, x, cfg: ModelConfig, plan: Plan, positions=None):
+    """Train/prefill: expand compressed KV per head; returns (out, (c_kv,k_rope))."""
+    B, S, _ = x.shape
+    dt = x.dtype
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_ckv(p, x, cfg, positions)
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["k_up"].astype(dt))
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["v_up"].astype(dt))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope[:, :, None, :], k_nope.shape[:3] + (rope_d,))], -1)
+    q = plan.act(q, "batch", None, "heads", None)
+    k = plan.act(k, "batch", None, "heads", None)
+    if S >= BLOCKWISE_THRESHOLD:
+        o = blockwise_sdpa(q, k, v, causal=True)
+    else:
+        o = _sdpa(q, k, v, causal_mask(S, S, 0), plan)
+    o = jnp.einsum("bshd,hdk->bsk", o, p["wo"].astype(dt))
+    return o, (c_kv, k_rope)
+
+
+def mla_cache_init(cfg, plan, batch, max_len, dtype, abstract=False):
+    mk = jax.ShapeDtypeStruct if abstract else (lambda s, d: jnp.zeros(s, d))
+    return {
+        "c_kv": mk((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": mk((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        "pos_ids": (jax.ShapeDtypeStruct((max_len,), jnp.int32) if abstract
+                    else jnp.full((max_len,), -1, jnp.int32)),
+    }
+
+
+def mla_cache_spec(plan: Plan, seq_axis=None):
+    from jax.sharding import PartitionSpec as P
+    b = plan.batch_axes
+    return {"c_kv": P(b, seq_axis, None), "k_rope": P(b, seq_axis, None),
+            "pos_ids": P(seq_axis)}
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig, plan: Plan):
+    """Absorbed decode: score directly against compressed cache (TPU-native)."""
+    B = x.shape[0]
+    dt = x.dtype
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = jnp.full((1, 1), pos)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)  # (B,1,H,nope/rope)
+    c_new, kr_new = _mla_ckv(p, x, cfg, positions)  # (B,1,r), (B,1,rope)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, pos, 1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new, pos, 1)
+    pos_ids = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos_ids"], jnp.array([pos], jnp.int32), pos, 0)
+    # absorb k_up into q: (B,1,H,r)
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["k_up"].astype(dt))
+    scores = (jnp.einsum("bshr,btr->bhst", q_c, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32))
+    scores = scores / jnp.sqrt(nope + rope_d).astype(jnp.float32)
+    valid = (pos_ids >= 0) & (pos_ids <= pos)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, -1).astype(dt)
+    ctx_c = jnp.einsum("bhst,btr->bshr", w, c_kv)  # (B,1,H,r)
+    o = jnp.einsum("bshr,rhk->bshk", ctx_c, p["v_up"].astype(dt))  # absorbed v_up
+    o = jnp.einsum("bshd,hdk->bsk", o, p["wo"].astype(dt))
+    return o, {"c_kv": c_kv, "k_rope": k_rope, "pos_ids": pos_ids}
+
+
+def mla_seed_cache(cache, kv, prefill_len: int):
+    c_kv, k_rope = kv
+    S = c_kv.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    return {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, 0, 1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, 0, 1),
+        "pos_ids": jax.lax.dynamic_update_slice_in_dim(cache["pos_ids"], pos, 0, 0),
+    }

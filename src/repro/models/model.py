@@ -1,0 +1,97 @@
+"""Unified model facade: one API over all 10 architecture families.
+
+    model = Model(cfg, plan)
+    meta   = model.param_meta()                    # ParamMeta tree
+    params = model.init(key)                       # materialized (smoke/CPU)
+    logits, aux = model.apply(params, batch)       # train forward
+    logits, cache = model.prefill(params, batch)   # serve: prefill
+    logits, cache = model.decode(params, tok, cache, pos)
+
+``batch`` is a dict: tokens (B,S) [+ labels], image_embeds (vlm),
+audio_frames (audio). Frontends for vlm/audio are stubs per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import multimodal as mm
+from repro.models import params as pm
+from repro.models import transformer as tf
+from repro.models.layers import cdt
+from repro.sharding.plan import Plan, make_plan
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, plan: Optional[Plan] = None):
+        self.cfg = cfg
+        self.plan = plan or make_plan(cfg, None)
+
+    # --- params -----------------------------------------------------------
+    def param_meta(self):
+        cfg, plan = self.cfg, self.plan
+        if cfg.family == "vlm":
+            return mm.vlm_params(cfg, plan)
+        if cfg.family == "audio":
+            return mm.whisper_params(cfg, plan)
+        return tf.lm_params(cfg, plan)
+
+    def init(self, key):
+        return pm.materialize(self.param_meta(), key, self.cfg.param_dtype)
+
+    def abstract_params(self):
+        return pm.abstract(self.param_meta(), self.cfg.param_dtype)
+
+    def n_params(self) -> int:
+        return pm.n_params(self.param_meta())
+
+    # --- forward ------------------------------------------------------------
+    def apply(self, params, batch: Dict[str, Any]):
+        cfg, plan = self.cfg, self.plan
+        tokens = batch["tokens"]
+        if cfg.family == "vlm":
+            return mm.vlm_apply(params, tokens, batch["image_embeds"], cfg, plan)
+        if cfg.family == "audio":
+            return mm.whisper_apply(params, tokens, batch["audio_frames"], cfg, plan)
+        return tf.lm_apply(params, tokens, cfg, plan)
+
+    # --- serving ------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, Any], max_len: Optional[int] = None):
+        cfg, plan = self.cfg, self.plan
+        tokens = batch["tokens"]
+        if cfg.family == "vlm":
+            return mm.vlm_prefill(params, tokens, batch["image_embeds"], cfg,
+                                  plan, max_len)
+        if cfg.family == "audio":
+            return mm.whisper_prefill(params, tokens, batch["audio_frames"],
+                                      cfg, plan, max_len)
+        return tf.lm_prefill(params, tokens, cfg, plan, max_len)
+
+    def decode(self, params, tokens, cache, pos):
+        cfg, plan = self.cfg, self.plan
+        if cfg.family == "vlm":
+            return mm.vlm_decode(params, tokens, cache, pos, cfg, plan)
+        if cfg.family == "audio":
+            return mm.whisper_decode(params, tokens, cache, pos, cfg, plan)
+        return tf.lm_decode(params, tokens, cache, pos, cfg, plan)
+
+    # --- caches ---------------------------------------------------------------
+    def cache(self, batch_size: int, max_len: int, abstract: bool = False):
+        cfg, plan = self.cfg, self.plan
+        dtype = cdt(cfg)
+        if cfg.family == "vlm":
+            return mm.vlm_cache(cfg, plan, batch_size, max_len, dtype, abstract)
+        if cfg.family == "audio":
+            return mm.whisper_cache(cfg, plan, batch_size, max_len, dtype, abstract)
+        return tf.lm_cache(cfg, plan, batch_size, max_len, dtype, abstract)
+
+    def cache_specs(self, seq_axis=None):
+        cfg, plan = self.cfg, self.plan
+        if cfg.family == "vlm":
+            return mm.vlm_cache_specs(cfg, plan, seq_axis)
+        if cfg.family == "audio":
+            return mm.whisper_cache_specs(cfg, plan, seq_axis)
+        return tf.lm_cache_specs(cfg, plan, seq_axis)

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts: top-k router + capacity-bounded scatter dispatch.
+
+Dispatch is scatter/gather based (GShard-style positions via one-hot cumsum)
+rather than the (tokens × experts × capacity) one-hot einsum — the dispatch
+tensors stay O(tokens·k), which is what makes deepseek-v2 (160 experts) fit.
+
+Shard-local grouping (§Perf iteration 2): tokens are reshaped to
+(G_loc, n_dp, gs, D) where the n_dp axis carries the data sharding, so each
+dispatch group lives entirely on one shard — routing, capacity positions,
+scatter and combine are communication-free; the only collectives left are the
+mathematically-required expert contractions ('tp' mode: hidden-dim psum;
+'ep' mode: token movement to expert shards). The earlier strided grouping
+spanned shards and pushed dispatch buffers through data-axis all-reduces
+(7.4 TB/chip/step on mixtral train_4k — §Perf log).
+
+Expert sharding comes from the plan: 'ep' (experts over model axis, e.g.
+deepseek-v2 160/16) or 'tp' (hidden dim over model axis, e.g. mixtral 8<16).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamMeta, dense
+from repro.models import layers
+from repro.sharding.plan import Plan
+
+
+def moe_params(cfg: ModelConfig, plan: Plan):
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    p = {
+        "router": dense(d, E, "embed", None),
+        "wg": ParamMeta((E, d, ff), ("experts", "embed", "expert_ffn"), fan_in=d),
+        "wu": ParamMeta((E, d, ff), ("experts", "embed", "expert_ffn"), fan_in=d),
+        "wd": ParamMeta((E, ff, d), ("experts", "expert_ffn", "embed"), fan_in=ff),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.mlp_params(
+            cfg, d_ff=cfg.num_shared_experts * cfg.moe_d_ff)
+    return p
+
+
+def router_topk(logits, k: int):
+    """Softmax-then-top-k with renormalized weights (+ aux losses).
+
+    logits: (..., E); weights/idx: (..., k); aux/z are scalars (mean over
+    all leading dims)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / (jnp.sum(w, -1, keepdims=True) + 1e-9)
+    E = logits.shape[-1]
+    lead = tuple(range(logits.ndim - 1))
+    me = jnp.mean(probs, axis=lead)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=-2),
+                  axis=lead) / k
+    aux = E * jnp.sum(me * ce)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32), -1)))
+    return w, idx, aux, z
+
+
+def _dispatch_batched(p, x, cfg: ModelConfig, plan: Plan, capacity: int):
+    """x: (n, gs, D) — n shard-local groups. Returns (out, aux, z)."""
+    n, T, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    dt = x.dtype
+    logits = jnp.einsum("ntd,de->nte", x, p["router"].astype(dt))
+    w, idx, aux, z = router_topk(logits, k)  # (n,T,k)
+
+    flat_e = idx.reshape(n, T * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (n,T*k,E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < capacity
+    slot = jnp.where(keep, flat_e * capacity + pos, E * capacity)  # (n,T*k)
+
+    tok_idx = jnp.repeat(jnp.arange(T), k)  # (T*k,)
+    xs = jnp.take(x, tok_idx, axis=1)  # (n,T*k,D)
+    xs = xs * keep[..., None].astype(dt)
+
+    def scatter_one(xs_i, slot_i):
+        return jnp.zeros((E * capacity + 1, D), dt).at[slot_i].add(xs_i)[:-1]
+
+    buf = jax.vmap(scatter_one)(xs, slot).reshape(n, E, capacity, D)
+    buf = plan.act(buf, "batch", "experts", None, None)
+
+    # expert FFN (SwiGLU), batched over groups x experts
+    g = jnp.einsum("necd,edf->necf", buf, p["wg"].astype(dt))
+    u = jnp.einsum("necd,edf->necf", buf, p["wu"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = plan.act(h, "batch", "experts", None, "expert_ffn")
+    out_buf = jnp.einsum("necf,efd->necd", h, p["wd"].astype(dt))
+    out_buf = plan.act(out_buf, "batch", "experts", None, None)
+
+    flat = out_buf.reshape(n, E * capacity, D)
+    safe_slot = jnp.minimum(slot, E * capacity - 1)
+    gathered = jnp.take_along_axis(flat, safe_slot[..., None], axis=1)
+    gathered = gathered * (keep[..., None]
+                           * w.reshape(n, T * k)[..., None]).astype(dt)
+    out = jnp.sum(gathered.reshape(n, T, k, D), axis=2)
+    return out, aux, z
+
+
+def moe_apply(p, x, cfg: ModelConfig, plan: Plan) -> Tuple[jax.Array, Dict]:
+    """x: (B,S,D) -> (out, {aux, z}) with shared experts added."""
+    B, S, D = x.shape
+    T = B * S
+    n_dp = 1
+    if plan.mesh is not None and plan.dp_axes and not plan.replicate_batch:
+        import numpy as _np
+        n_dp = int(_np.prod([plan.mesh.shape[a] for a in plan.dp_axes]))
+        if B % n_dp != 0:
+            n_dp = 1
+    gs = cfg.moe_group_size or T
+    gs = min(gs, T // n_dp)
+    g_loc = (T // n_dp) // gs
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    capacity = max(int(gs * k * cfg.moe_capacity_factor / E), 4)
+
+    xf = x.reshape(T, D).reshape(n_dp, g_loc, gs, D).swapaxes(0, 1)
+    # (G_loc, n_dp, gs, D): scan axis unsharded, dim 1 carries data sharding
+    xf = plan.act(xf, None, "batch", None, None)
+
+    def body(_, xg):
+        out, aux, z = _dispatch_batched(p, xg, cfg, plan, capacity)
+        return None, (out, aux, z)
+
+    if g_loc == 1:
+        o, aux, z = _dispatch_batched(p, xf[0], cfg, plan, capacity)
+        outs, auxs, zs = o[None], aux[None], z[None]
+    else:
+        _, (outs, auxs, zs) = jax.lax.scan(body, None, xf)
+
+    out = outs.swapaxes(0, 1).reshape(B, S, D)
+    if cfg.num_shared_experts:
+        out = out + layers.mlp_apply(p["shared"], x, cfg, plan)
+    losses = {"moe_aux": jnp.mean(auxs), "moe_z": jnp.mean(zs)}
+    return out, losses

@@ -1,0 +1,87 @@
+"""Parameter metadata machinery.
+
+Models are built once as a pytree of :class:`ParamMeta` (shape + logical axes
++ init rule). From that single source of truth we derive:
+
+- materialized random params (for smoke tests / real training),
+- ``jax.ShapeDtypeStruct`` stand-ins (for the multi-pod dry-run — no allocation),
+- ``PartitionSpec`` trees (via ``sharding.plan``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamMeta:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]  # one logical axis name (or None) per dim
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    fan_in: int = 0  # 0 -> product of all dims except last
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def tree_map_meta(fn: Callable[[ParamMeta], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_meta)
+
+
+def abstract(tree, dtype: Optional[str] = None):
+    """ShapeDtypeStruct tree (dry-run stand-ins; no device allocation)."""
+    return tree_map_meta(
+        lambda m: jax.ShapeDtypeStruct(m.shape, jnp.dtype(dtype or m.dtype)), tree
+    )
+
+
+def n_params(tree) -> int:
+    total = 0
+    for m in jax.tree_util.tree_leaves(tree, is_leaf=is_meta):
+        total += int(np.prod(m.shape))
+    return total
+
+
+def materialize(tree, key, dtype: Optional[str] = None):
+    """Random-initialize a ParamMeta tree (smoke tests / CPU training)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_meta)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for m, k in zip(leaves, keys):
+        dt = jnp.dtype(dtype or m.dtype)
+        if m.init == "zeros":
+            out.append(jnp.zeros(m.shape, dt))
+        elif m.init == "ones":
+            out.append(jnp.ones(m.shape, dt))
+        else:
+            fan_in = m.fan_in or (int(np.prod(m.shape[:-1])) or 1)
+            scale = {"normal": 1.0, "embed": 1.0, "small": 0.1}[m.init] / np.sqrt(fan_in)
+            out.append(jax.random.normal(k, m.shape, dt) * scale)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --- small helpers used by the model definitions ---------------------------
+
+def dense(d_in: int, d_out: int, l_in=None, l_out=None, **kw) -> ParamMeta:
+    return ParamMeta((d_in, d_out), (l_in, l_out), fan_in=d_in, **kw)
+
+
+def stack(meta: ParamMeta, n: int, axis_name: str = "layers") -> ParamMeta:
+    """Add a leading stacked-layers dim (for scan-over-layers params)."""
+    return dataclasses.replace(
+        meta, shape=(n,) + meta.shape, logical=(axis_name,) + meta.logical
+    )
+
+
+def stack_tree(tree, n: int):
+    return tree_map_meta(lambda m: stack(m, n), tree)

@@ -1,0 +1,190 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan + recurrent decode.
+
+Follows arXiv:2405.21060: per-head scalar decay A, rank-1 state updates
+S_t = exp(dt·A)·S_{t-1} + dt·B_t ⊗ x_t, read-out y_t = C_t·S_t + D·x_t,
+computed chunk-parallel: quadratic attention-like intra-chunk term + a scan
+over per-chunk states for the inter-chunk term.
+
+The pure-jnp implementation here is the reference path (and the oracle for
+``kernels/mamba_scan``); projections are TP-sharded over ssm heads.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamMeta, dense
+from repro.models.layers import rms_norm
+from repro.sharding.plan import Plan
+
+
+def ssm_params(cfg: ModelConfig, plan: Plan):
+    d, din = cfg.d_model, cfg.d_inner
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_ngroups
+    K = cfg.ssm_conv
+    return {
+        "wz": dense(d, din, "embed", "dinner"),
+        "wx": dense(d, din, "embed", "dinner"),
+        "wB": ParamMeta((d, G, N), ("embed", None, None), fan_in=d),
+        "wC": ParamMeta((d, G, N), ("embed", None, None), fan_in=d),
+        "wdt": ParamMeta((d, H), ("embed", "ssm_heads"), fan_in=d),
+        "conv_w": ParamMeta((din, K), ("dinner", None), init="small", fan_in=K),
+        "conv_b": ParamMeta((din,), ("dinner",), init="zeros"),
+        "A_log": ParamMeta((H,), ("ssm_heads",), init="ones"),
+        "D": ParamMeta((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamMeta((H,), ("ssm_heads",), init="zeros"),
+        "norm": ParamMeta((din,), ("dinner",), init="ones"),
+        "wo": dense(din, d, "dinner", "embed"),
+    }
+
+
+def _causal_conv(x, w, b, window: int):
+    """Depthwise causal conv via shifted adds. x:(B,S,C), w:(C,K)."""
+    out = b.astype(x.dtype) * jnp.ones_like(x)
+    for k in range(window):
+        shift = window - 1 - k
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xs * w[:, k].astype(x.dtype)
+    return out
+
+
+def _segsum_exp(dA):
+    """L[i,j] = exp(sum_{j<k<=i} dA_k) for i>=j else 0. dA:(..., Q).
+
+    The masked (i<j) entries have *positive* diff (cumsum is decreasing), so
+    clamp BEFORE exp — otherwise the dead where-branch overflows and poisons
+    gradients (where-grad NaN)."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(mask, diff, -1e30)
+    return jnp.exp(diff)
+
+
+def ssd_chunked(xh, dt, A, B, C, chunk: int):
+    """SSD scan. xh:(b,S,H,P) dt:(b,S,H) A:(H,) B,C:(b,S,H,N) -> y, final state.
+
+    All math in fp32; returns y in xh.dtype and state (b,H,P,N) fp32.
+    """
+    b, S, H, P = xh.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    dtype = xh.dtype
+    xh = xh.astype(jnp.float32).reshape(b, nc, Q, H, P)
+    dt = dt.astype(jnp.float32).reshape(b, nc, Q, H)
+    B = B.astype(jnp.float32).reshape(b, nc, Q, H, N)
+    C = C.astype(jnp.float32).reshape(b, nc, Q, H, N)
+    A = A.astype(jnp.float32)
+
+    dA = dt * A  # (b,nc,Q,H)
+    dAh = jnp.moveaxis(dA, -1, -2)  # (b,nc,H,Q)
+    L = _segsum_exp(dAh)  # (b,nc,H,Q,Q)
+    # intra-chunk (quadratic within chunk)
+    G = jnp.einsum("bcqhn,bckhn->bchqk", C, B)  # (b,nc,H,Q,Q)
+    M = G * L
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M, dt, xh)
+    # per-chunk end states
+    decay_to_end = jnp.exp(jnp.cumsum(dAh, -1)[..., -1:] - jnp.cumsum(dAh, -1))
+    chunk_state = jnp.einsum("bchq,bcqh,bcqhn,bcqhp->bchpn",
+                             decay_to_end, dt, B, xh)
+    chunk_decay = jnp.exp(jnp.sum(dAh, -1))  # (b,nc,H)
+
+    def scan_fn(s, inp):
+        cs_c, dec_c = inp
+        s_new = s * dec_c[..., None, None] + cs_c
+        return s_new, s  # emit state *entering* the chunk
+
+    init = jnp.zeros((b, H, P, N), jnp.float32)
+    final, states_in = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    states_in = jnp.moveaxis(states_in, 0, 1)  # (b,nc,H,P,N)
+    # inter-chunk contribution
+    in_decay = jnp.exp(jnp.cumsum(dAh, -1))  # (b,nc,H,Q)
+    y_inter = jnp.einsum("bcqhn,bchq,bchpn->bcqhp", C, in_decay, states_in)
+    y = (y_intra + y_inter).reshape(b, S, H, P).astype(dtype)
+    return y, final
+
+
+def ssm_apply(p, x, cfg: ModelConfig, plan: Plan) -> Tuple[jax.Array, Dict]:
+    """Train/prefill. x:(B,S,D) -> (out, final_state_dict for decode seeding)."""
+    Bsz, S, D = x.shape
+    dt_ = x.dtype
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_ngroups
+    z = x @ p["wz"].astype(dt_)
+    xr_raw = x @ p["wx"].astype(dt_)
+    xin = _causal_conv(xr_raw, p["conv_w"], p["conv_b"], cfg.ssm_conv)
+    xin = jax.nn.silu(xin)
+    xin = plan.act(xin, "batch", None, "dinner")
+    Bm = jnp.einsum("bsd,dgn->bsgn", x, p["wB"].astype(dt_))
+    Cm = jnp.einsum("bsd,dgn->bsgn", x, p["wC"].astype(dt_))
+    dt = jax.nn.softplus(x @ p["wdt"].astype(dt_) + p["dt_bias"].astype(dt_))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xin.reshape(Bsz, S, H, P)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    y, state = ssd_chunked(xh, dt, A, Bh, Ch, cfg.ssm_chunk)
+    y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["wo"].astype(dt_)
+    # raw (pre-conv) tail seeds the decode conv state
+    conv_raw = jnp.moveaxis(xr_raw, 1, 2)[:, :, -(cfg.ssm_conv - 1):]
+    return out, {"ssm": state, "conv": conv_raw}
+
+
+def ssm_state_init(cfg: ModelConfig, plan: Plan, batch: int, dtype, abstract=False):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    mk = jax.ShapeDtypeStruct if abstract else (lambda s, d: jnp.zeros(s, d))
+    return {
+        "ssm": mk((batch, H, P, N), jnp.float32),
+        "conv": mk((batch, cfg.d_inner, cfg.ssm_conv - 1), dtype),
+    }
+
+
+def ssm_state_spec(plan: Plan):
+    from jax.sharding import PartitionSpec as Pn
+    b = plan.batch_axes
+    h = plan.rules.get("ssm_heads")
+    return {"ssm": Pn(b, h, None, None), "conv": Pn(b, plan.rules.get("dinner"), None)}
+
+
+def ssm_decode(p, x, state, cfg: ModelConfig, plan: Plan):
+    """One-token recurrent step. x:(B,1,D)."""
+    Bsz = x.shape[0]
+    dt_ = x.dtype
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_ngroups
+    xt = x[:, 0]
+    z = xt @ p["wz"].astype(dt_)
+    xr = xt @ p["wx"].astype(dt_)  # (B, din) raw pre-conv
+    conv_hist = jnp.concatenate([state["conv"], xr[:, :, None]], axis=2)  # (B,din,K)
+    xin = jnp.einsum("bck,ck->bc", conv_hist.astype(dt_), p["conv_w"].astype(dt_))
+    xin = jax.nn.silu(xin + p["conv_b"].astype(dt_))
+    Bm = jnp.einsum("bd,dgn->bgn", xt, p["wB"].astype(dt_))
+    Cm = jnp.einsum("bd,dgn->bgn", xt, p["wC"].astype(dt_))
+    dt = jax.nn.softplus(xt @ p["wdt"].astype(dt_) + p["dt_bias"].astype(dt_))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    xh = xin.reshape(Bsz, H, P).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A)  # (B,H)
+    s = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dtf, xh, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", s, Ch).astype(dt_)
+    y = y + xh.astype(dt_) * p["D"].astype(dt_)[None, :, None]
+    y = y.reshape(Bsz, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["wo"].astype(dt_))[:, None]
+    return out, {"ssm": s, "conv": conv_hist[:, :, 1:]}

@@ -1,0 +1,121 @@
+"""Serving engine: continuous-batching scheduler over prefill/decode steps.
+
+Requests enter a queue; the engine prefills new requests into free cache
+slots (one jit'd prefill per admission batch) and advances all active slots
+with a single fused decode step per tick. Slots free on EOS/max-tokens.
+This is the slot-based continuous batching of production LLM servers, sized
+down to run the reduced configs on CPU.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.serve.step import sample
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params, batch_slots: int = 4,
+                 max_len: int = 256, eos_id: int = 1,
+                 temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.eos = eos_id
+        self.temperature = temperature
+        cfg = model.cfg
+        self.cache = model.cache(self.B, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * self.B
+        self.pos = 0  # aligned decoding position (slot-synchronous design)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.key = jax.random.PRNGKey(0)
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode(p, t, c, pos))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # -- admission: batch-prefill queued requests into free slots ------------
+    def _admit(self):
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        if not free or not self.queue:
+            return
+        batch = [self.queue.pop(0) for _ in free[: len(self.queue)]]
+        if not batch:
+            return
+        P = max(len(r.prompt) for r in batch)
+        toks = np.zeros((len(batch), P), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, P - len(r.prompt):] = r.prompt  # left-pad
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, max_len=self.max_len)
+        # scatter each prefilled row into its slot
+        for i, (slot, req) in enumerate(zip(free, batch)):
+            self.slot_req[slot] = req
+            # write row i of each cache leaf into slot of engine cache
+            def put(ec, pc):
+                # batch axis location differs per leaf rank; match by shape
+                for ax in range(ec.ndim):
+                    if ec.shape[ax] == self.B and pc.shape[ax] == len(batch):
+                        idx = [slice(None)] * ec.ndim
+                        idx[ax] = slot
+                        src = [slice(None)] * pc.ndim
+                        src[ax] = i
+                        return ec.at[tuple(idx)].set(pc[tuple(src)])
+                return ec  # leaf without batch axis (e.g. pos_ids)
+            self.cache = jax.tree_util.tree_map(put, self.cache, cache)
+            nxt = int(jnp.argmax(logits[i, -1]))
+            req.out.append(nxt)
+        self.pos = P
+
+    # -- one decode tick over all active slots --------------------------------
+    def _tick(self):
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        toks = np.zeros((self.B, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slot_req[i].out[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), self.pos)
+        self.pos += 1
+        self.key, sk = jax.random.split(self.key)
+        nxt = np.asarray(sample(jnp.asarray(logits)[:, 0], sk,
+                                self.temperature))  # logits: (B,1,V)
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(nxt[i])
+            req.out.append(tok)
+            if tok == self.eos or len(req.out) >= req.max_new \
+                    or self.pos >= self.max_len - 1:
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[i] = None
+
+    def run(self, max_ticks: int = 512) -> List[Request]:
+        ticks = 0
+        while (self.queue or any(self.slot_req)) and ticks < max_ticks:
+            if not any(self.slot_req):
+                self._admit()
+            self._tick()
+            ticks += 1
+        return self.finished

@@ -1,0 +1,44 @@
+"""Serving steps: prefill and single-token decode (+ sampling).
+
+``prefill_step``: (params, batch) -> (last_logits, cache)
+``decode_step``:  (params, cache, tokens(B,1), pos) -> (logits(B,V), cache)
+
+Both are pure functions for jit with shardings from the plan; the batch
+scheduler in serve/engine.py drives them.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, max_len=max_len)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens, pos):
+        logits, cache = model.decode(params, tokens, cache, pos)
+        return logits[:, 0], cache
+
+    return decode_step
+
+
+def sample(logits, key, temperature: float = 0.0, top_k: int = 0):
+    """logits (B,V) -> tokens (B,). temperature 0 = greedy."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        kth = vals[..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1)

@@ -1,0 +1,195 @@
+"""Sharding plan: logical axes -> mesh axes, dimension padding, ZeRO specs.
+
+Mesh axis conventions (see launch/mesh.py):
+  - ``pod``   outer data axis across pods (also the pipeline axis when PP>1)
+  - ``data``  within-pod data-parallel axis
+  - ``model`` tensor/expert-parallel axis
+
+Logical parameter axes used by the model definitions:
+  vocab, heads, kv_heads, ffn, experts, expert_ffn, dinner, ssm_heads,
+  embed (d_model — replicated), layers (scan dim — replicated).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, pad_to_multiple
+from repro.models import params as pm
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+@dataclass(frozen=True)
+class Plan:
+    """Resolved parallelism plan for (cfg, mesh)."""
+
+    mesh: Optional[Mesh]
+    tp: int
+    dp_axes: Tuple[str, ...]  # ('pod','data') | ('data',) | ()
+    tp_axis: Optional[str]
+    expert_mode: str  # 'ep' | 'tp' | 'none'
+    # effective (padded) model dims
+    num_heads: int
+    num_kv_heads: int
+    kv_repeat: int  # how many times each original kv head is replicated
+    vocab: int
+    sequence_parallel: bool = False
+    zero_opt: bool = True  # ZeRO-1 optimizer-state sharding over dp
+    fsdp: bool = True  # fully-shard params over dp axes too (FSDP/ZeRO-3)
+    replicate_batch: bool = False  # batch too small for dp (e.g. long_500k B=1)
+    rules: Dict[str, Optional[str]] = field(default_factory=dict)
+
+    # -- parameter specs ----------------------------------------------------
+    def spec(self, logical: Tuple[Optional[str], ...]) -> P:
+        return P(*(self.rules.get(ax) if ax else None for ax in logical))
+
+    def param_spec(self, meta: "pm.ParamMeta") -> P:
+        """Param spec; with FSDP the largest replicated dim also shards over dp."""
+        if self.fsdp:
+            return zero_spec(meta, self)
+        return self.spec(meta.logical)
+
+    def param_specs(self, meta_tree):
+        return pm.tree_map_meta(self.param_spec, meta_tree)
+
+    def param_shardings(self, meta_tree):
+        assert self.mesh is not None
+        return pm.tree_map_meta(
+            lambda m: NamedSharding(self.mesh, self.param_spec(m)), meta_tree
+        )
+
+    # -- activation specs ---------------------------------------------------
+    @property
+    def batch_axes(self):
+        if self.replicate_batch or not self.dp_axes:
+            return None
+        return self.dp_axes
+
+    def act(self, x, *logical):
+        """with_sharding_constraint by logical activation axes.
+
+        logical entries: 'batch', 'seq', 'embed'(=None), 'heads', 'kv_heads',
+        'ffn', 'experts', 'dinner', 'vocab', None.
+        """
+        if self.mesh is None or not self.mesh.shape:
+            return x
+        spec = []
+        for ax in logical:
+            if ax == "batch":
+                spec.append(self.batch_axes)
+            elif ax == "seq":
+                spec.append(self.rules.get("seq"))
+            elif ax is None or ax == "embed":
+                spec.append(None)
+            else:
+                spec.append(self.rules.get(ax))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, P(*spec)))
+
+
+def make_plan(
+    cfg: ModelConfig,
+    mesh: Optional[Mesh] = None,
+    *,
+    sequence_parallel: bool = False,
+    seq_shard_decode: bool = False,
+    zero_opt: bool = True,
+    fsdp: bool = True,
+    replicate_batch: bool = False,
+) -> Plan:
+    """Resolve a parallelism plan for ``cfg`` on ``mesh``.
+
+    ``seq_shard_decode``: shard decode KV caches / sequences over the data axis
+    (used by ``long_500k`` where global_batch=1 cannot feed the data axis).
+    """
+    if mesh is None:
+        tp, dp_axes, tp_axis = 1, (), None
+    else:
+        names = mesh.axis_names
+        tp = mesh.shape["model"] if "model" in names else 1
+        tp_axis = "model" if "model" in names else None
+        dp_axes = tuple(a for a in ("pod", "data") if a in names)
+
+    # --- head padding / kv replication so TP=16 divides everything --------
+    num_heads = pad_to_multiple(cfg.num_heads, tp) if cfg.num_heads else 0
+    if cfg.num_kv_heads:
+        kvh = cfg.num_kv_heads
+        if kvh % tp and cfg.num_heads % tp == 0:
+            # replicate kv heads up to per-group multiple of tp (GQA -> finer GQA)
+            target = _lcm(kvh, tp)
+            kv_repeat = target // kvh
+            kvh = target
+        elif kvh % tp:
+            # heads themselves padded (e.g. whisper 12H -> 16H): pad kv too
+            kvh, kv_repeat = num_heads, 1
+        else:
+            kv_repeat = 1
+    else:
+        kvh, kv_repeat = 0, 1
+
+    vocab = pad_to_multiple(cfg.vocab_size, max(128, tp))
+
+    # --- expert sharding mode ---------------------------------------------
+    if cfg.num_experts == 0:
+        expert_mode = "none"
+    elif cfg.num_experts % tp == 0:
+        expert_mode = "ep"  # experts across model axis (deepseek-v2: 160/16=10)
+    else:
+        expert_mode = "tp"  # TP inside each expert (mixtral: 8 experts < 16)
+
+    rules: Dict[str, Optional[str]] = {
+        "vocab": tp_axis,
+        "heads": tp_axis,
+        "kv_heads": tp_axis,
+        "ffn": tp_axis,
+        "dinner": tp_axis,
+        "ssm_heads": tp_axis,
+        "experts": tp_axis if expert_mode == "ep" else None,
+        "expert_ffn": tp_axis if expert_mode == "tp" else None,
+        "layers": None,
+        "embed": None,
+        "seq": ("data" if seq_shard_decode else (tp_axis if sequence_parallel else None)),
+        "image_tokens": None,
+    }
+
+    return Plan(
+        mesh=mesh, tp=tp, dp_axes=dp_axes, tp_axis=tp_axis,
+        expert_mode=expert_mode, num_heads=num_heads, num_kv_heads=kvh,
+        kv_repeat=kv_repeat, vocab=vocab,
+        sequence_parallel=sequence_parallel, zero_opt=zero_opt, fsdp=fsdp,
+        replicate_batch=replicate_batch, rules=rules,
+    )
+
+
+# --- ZeRO-1: shard optimizer moments over the data axes ---------------------
+
+def zero_spec(meta: pm.ParamMeta, plan: Plan) -> P:
+    """Fully-sharded spec: base spec + largest replicated dim over dp axes."""
+    base = list(plan.spec(meta.logical))
+    while len(base) < len(meta.shape):
+        base.append(None)
+    if not plan.dp_axes or plan.mesh is None:
+        return P(*base)
+    dp_size = int(np.prod([plan.mesh.shape[a] for a in plan.dp_axes]))
+    # choose the largest dim that is unsharded and divisible by dp
+    cand = [
+        (meta.shape[i], i)
+        for i in range(len(meta.shape))
+        if base[i] is None and meta.shape[i] % dp_size == 0 and meta.shape[i] >= dp_size
+    ]
+    if not cand:
+        return P(*base)
+    _, i = max(cand)
+    base[i] = plan.dp_axes if len(plan.dp_axes) > 1 else plan.dp_axes[0]
+    return P(*base)
+
+
+def zero_specs(meta_tree, plan: Plan):
+    return pm.tree_map_meta(lambda m: zero_spec(m, plan), meta_tree)

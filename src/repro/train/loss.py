@@ -1,0 +1,22 @@
+"""Cross-entropy LM loss with z-loss and masking (labels < 0 are padding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits, labels, z_coef: float = 1e-4):
+    """logits (B,S,V) — padded vocab is fine: labels index real rows only."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    z = jnp.square(lse) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    zloss = z_coef * jnp.sum(z) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels_safe) * mask) / denom
+    return loss + zloss, {"nll": loss, "z_loss": zloss, "accuracy": acc,
+                          "tokens": denom}

@@ -1,0 +1,160 @@
+"""In-house optimizers: AdamW and Adafactor (factored second moments).
+
+Optimizer state is described as a ParamMeta tree mirroring the params, so the
+dry-run can lower ``train_step`` against abstract state (no allocation) and
+the sharding plan can assign PartitionSpecs uniformly (FSDP/ZeRO: states
+inherit the fully-sharded param specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import params as pm
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"
+    # adafactor
+    decay_rate: float = 0.8
+    min_dim_factored: int = 128
+
+
+def lr_schedule(oc: OptConfig, step):
+    """Linear warmup + cosine decay. Warmup counts from 1 (step 0 trains)."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum((step + 1.0) / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup_steps) /
+                    jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    return oc.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), gn
+
+
+def _is_factored(shape, oc: OptConfig) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= oc.min_dim_factored
+            and shape[-2] >= oc.min_dim_factored)
+
+
+class Optimizer:
+    def __init__(self, oc: OptConfig):
+        self.oc = oc
+
+    # --- state as ParamMeta (single source of truth) ------------------------
+    def state_meta(self, param_meta):
+        oc = self.oc
+
+        def per_param(m: pm.ParamMeta):
+            if oc.kind == "adamw":
+                z = dataclasses.replace(m, init="zeros", dtype=oc.moment_dtype)
+                return {"m": z, "v": z}
+            # adafactor
+            if _is_factored(m.shape, oc):
+                vr = pm.ParamMeta(m.shape[:-1], m.logical[:-1], init="zeros",
+                                  dtype=oc.moment_dtype)
+                vc = pm.ParamMeta(m.shape[:-2] + m.shape[-1:],
+                                  m.logical[:-2] + m.logical[-1:], init="zeros",
+                                  dtype=oc.moment_dtype)
+                return {"vr": vr, "vc": vc}
+            return {"v": dataclasses.replace(m, init="zeros", dtype=oc.moment_dtype)}
+
+        return pm.tree_map_meta(per_param, param_meta)
+
+    def init(self, params, param_meta=None):
+        oc = self.oc
+
+        def per_param(p):
+            if oc.kind == "adamw":
+                # distinct buffers: m and v are donated separately
+                return {"m": jnp.zeros(p.shape, jnp.dtype(oc.moment_dtype)),
+                        "v": jnp.zeros(p.shape, jnp.dtype(oc.moment_dtype))}
+            if _is_factored(p.shape, oc):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.dtype(oc.moment_dtype)),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.dtype(oc.moment_dtype))}
+            return {"v": jnp.zeros(p.shape, jnp.dtype(oc.moment_dtype))}
+
+        return jax.tree_util.tree_map(per_param, params)
+
+    # --- update -------------------------------------------------------------
+    def update(self, params, grads, state, step):
+        oc = self.oc
+        grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+        lr = lr_schedule(oc, step)
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+
+        def upd_adamw(p, g, s):
+            g = g.astype(jnp.float32)
+            m = s["m"].astype(jnp.float32) * oc.beta1 + (1 - oc.beta1) * g
+            v = s["v"].astype(jnp.float32) * oc.beta2 + (1 - oc.beta2) * g * g
+            mhat = m / (1 - oc.beta1 ** stepf)
+            vhat = v / (1 - oc.beta2 ** stepf)
+            upd = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p.astype(
+                jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            mdt = jnp.dtype(oc.moment_dtype)
+            return new_p, {"m": m.astype(mdt), "v": v.astype(mdt)}
+
+        def upd_adafactor(p, g, s):
+            g = g.astype(jnp.float32)
+            beta2t = 1.0 - jnp.power(stepf, -oc.decay_rate)
+            g2 = g * g + 1e-30
+            mdt = jnp.dtype(oc.moment_dtype)
+            if "vr" in s:
+                vr = s["vr"].astype(jnp.float32) * beta2t + (1 - beta2t) * jnp.mean(
+                    g2, axis=-1)
+                vc = s["vc"].astype(jnp.float32) * beta2t + (1 - beta2t) * jnp.mean(
+                    g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / (jnp.mean(vr, axis=-1, keepdims=True)[..., None] + 1e-30))
+                upd = g / (jnp.sqrt(denom) + 1e-30)
+                new_s = {"vr": vr.astype(mdt), "vc": vc.astype(mdt)}
+            else:
+                v = s["v"].astype(jnp.float32) * beta2t + (1 - beta2t) * g2
+                upd = g / (jnp.sqrt(v) + 1e-30)
+                new_s = {"v": v.astype(mdt)}
+            # relative step clipping (RMS-1 style)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms)
+            upd = upd + oc.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return new_p, new_s
+
+        upd = upd_adamw if oc.kind == "adamw" else upd_adafactor
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_state = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def make_optimizer(cfg, **overrides) -> Optimizer:
+    kind = getattr(cfg, "optimizer", "adamw")
+    oc = OptConfig(kind=kind, **overrides)
+    return Optimizer(oc)

@@ -1,0 +1,108 @@
+"""train_step / eval_step builders with microbatch gradient accumulation.
+
+``make_train_step(model, opt, n_accum)`` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+suitable for jit with in/out shardings from the plan. Microbatches are
+scanned (sequential) so per-chip activation memory is bounded: the global
+batch (B, S) is reshaped to (n_accum, B/n_accum, S).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.loss import lm_loss
+from repro.train.optimizer import Optimizer
+
+
+def _split_batch(batch: Dict[str, Any], n: int):
+    def do(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return {k: do(v) for k, v in batch.items()}
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, mb):
+        logits, aux = model.apply(params, mb)
+        loss, metrics = lm_loss(logits, mb["labels"])
+        cfg = model.cfg
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_coef * aux["moe_aux"] \
+                        + cfg.router_z_coef * aux["moe_z"]
+            metrics = {**metrics, **aux}
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt: Optimizer, n_accum: int = 1,
+                    hoist_gather: bool = False):
+    """hoist_gather (§Perf iteration 4, default OFF): cast params to the
+    compute dtype and constrain to the TP-only layout once per step instead
+    of per microbatch. MEASURED REFUTED on deepseek-67b train_4k: XLA already
+    hoists the loop-invariant all-gathers (LICM), so this only materialized a
+    second full-precision copy (+16 GB temp, collective unchanged). Kept as
+    an opt-in knob for runtimes without LICM across the accumulation loop."""
+    loss_fn = make_loss_fn(model)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    plan = model.plan
+    hoist = (hoist_gather and n_accum > 1 and plan.mesh is not None
+             and plan.fsdp and plan.dp_axes)
+    if hoist:
+        from repro.models import params as pm
+        meta = model.param_meta()
+        gathered_specs = pm.tree_map_meta(lambda m: plan.spec(m.logical), meta)
+        fsdp_specs = plan.param_specs(meta)
+        from jax.sharding import NamedSharding
+
+        def gather(p, s):
+            return jax.lax.with_sharding_constraint(
+                p.astype(jnp.dtype(model.cfg.dtype)),
+                NamedSharding(plan.mesh, s))
+
+        def scatter_grad(g, s):
+            return jax.lax.with_sharding_constraint(
+                g.astype(jnp.float32), NamedSharding(plan.mesh, s))
+
+    def train_step(params, opt_state, batch, step):
+        if n_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            params_c = (jax.tree_util.tree_map(gather, params, gathered_specs)
+                        if hoist else params)
+            mbs = _split_batch(batch, n_accum)
+
+            def body(carry, mb):
+                acc_g, acc_l = carry
+                (l, m), g = grad_fn(params_c, mb)
+                if hoist:
+                    g = jax.tree_util.tree_map(scatter_grad, g, fsdp_specs)
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+                return (acc_g, acc_l + l), m
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), ms = jax.lax.scan(body, (zero_g, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n_accum, grads)
+            loss = loss_sum / n_accum
+            metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x, 0), ms)
+
+        params, opt_state, opt_metrics = opt.update(params, grads, opt_state, step)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return {**metrics, "loss": loss}
+
+    return eval_step

@@ -1,0 +1,14 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests see 1 device;
+only launch/dryrun.py (and subprocess tests) request 512 placeholders."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,93 @@
+"""Characterized library: the paper's Fig 2 / Fig 3 anchors hold exactly."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import characterization as C
+
+lib = C.default_library()
+
+
+class TestFig2:
+    def test_sb_temp_margin(self):
+        # Fig 2(a): SB delay at 40C is 0.85x of its 100C value
+        r = np.int32(C.SB)
+        ratio = float(lib.delay(r, 0.8, 40.0) / lib.delay(r, 0.8, 100.0))
+        assert ratio == pytest.approx(0.85, abs=0.01)
+
+    def test_sb_068_consumes_margin(self):
+        # Fig 2(b): V=0.68 raises 40C delay back to the worst case
+        r = np.int32(C.SB)
+        ratio = float(lib.delay(r, 0.68, 40.0) / lib.delay(r, 0.8, 100.0))
+        assert ratio == pytest.approx(1.0, abs=0.02)
+
+    def test_lut_steeper_than_sb(self):
+        # LUT delay "severely increases at lower voltages" (pass gates)
+        lut = float(lib.delay(np.int32(C.LUT), 0.68, 40.0)
+                    / lib.delay(np.int32(C.LUT), 0.8, 40.0))
+        sb = float(lib.delay(np.int32(C.SB), 0.68, 40.0)
+                   / lib.delay(np.int32(C.SB), 0.8, 40.0))
+        assert lut > sb
+        assert lut == pytest.approx(1.42, abs=0.03)
+
+    def test_sb_power_reduction_32pct(self):
+        # Fig 2(c): 120 mV cut shrinks SB power by ~32% (char point)
+        r = np.int32(C.SB)
+        f, act = 0.6, 0.5
+        p0 = float(lib.dynamic(r, 0.80, f, act) + lib.leakage(r, 0.80, 100.0))
+        p1 = float(lib.dynamic(r, 0.68, f, act) + lib.leakage(r, 0.68, 100.0))
+        assert 1 - p1 / p0 == pytest.approx(0.32, abs=0.05)
+
+    def test_bram_power_falls_faster(self):
+        # BRAM enjoys more power saving per mV than soft logic
+        sb = float(lib.dynamic(np.int32(C.SB), 0.68, 0.6, 0.5)
+                   / lib.dynamic(np.int32(C.SB), 0.80, 0.6, 0.5))
+        br = float(lib.dynamic(np.int32(C.BRAM), 0.83, 0.6, 0.5)
+                   / lib.dynamic(np.int32(C.BRAM), 0.95, 0.6, 0.5))
+        assert br < sb
+
+    def test_leakage_exponent(self):
+        # paper: leakage ~ e^{0.015 T}
+        r = np.int32(C.LUT)
+        ratio = float(lib.leakage(r, 0.8, 85.0) / lib.leakage(r, 0.8, 25.0))
+        assert ratio == pytest.approx(np.exp(0.015 * 60), rel=0.01)
+
+
+class TestFig3:
+    def test_internal_activity_anchors(self):
+        # alpha_in 0.1 -> ~0.05 ; alpha_in 1.0 -> ~0.27
+        assert float(C.internal_activity(0.1)) == pytest.approx(0.05, abs=0.01)
+        assert float(C.internal_activity(1.0)) == pytest.approx(0.27, abs=0.01)
+
+    def test_dsp_power_saturates(self):
+        # +37% from 0.1->0.3, flat to 0.7, slight decline after
+        f = C.dsp_activity_factor
+        rise = float(f(0.3) / f(0.1))
+        assert rise == pytest.approx(1.37 / 1.123, abs=0.05)
+        assert float(f(0.5)) == pytest.approx(float(f(0.69)), abs=0.01)
+        assert float(f(1.0)) < float(f(0.5))
+
+
+class TestMonotonicity:
+    @settings(max_examples=50, deadline=None)
+    @given(res=st.integers(0, C.N_RESOURCES - 1),
+           v=st.floats(0.60, 0.78), t=st.floats(0.0, 99.0))
+    def test_delay_monotone(self, res, v, t):
+        r = np.int32(res)
+        vn = 0.95 if res == C.BRAM else 0.80
+        # delay increases as V drops and as T rises (super-threshold regime)
+        assert float(lib.delay(r, v, t)) >= float(lib.delay(r, vn, t)) - 1e-6
+        assert float(lib.delay(r, vn, t)) <= float(
+            lib.delay(r, vn, min(t + 20, 100.0))) + 1e-6
+
+    @settings(max_examples=50, deadline=None)
+    @given(res=st.integers(0, C.N_RESOURCES - 1),
+           v=st.floats(0.56, 0.94), t=st.floats(0.0, 100.0))
+    def test_power_monotone_in_v(self, res, v, t):
+        r = np.int32(res)
+        dv = 0.01
+        p_lo = float(lib.dynamic(r, v, 0.5, 0.5) + lib.leakage(r, v, t))
+        p_hi = float(lib.dynamic(r, v + dv, 0.5, 0.5)
+                     + lib.leakage(r, v + dv, t))
+        assert p_lo <= p_hi + 1e-9

@@ -1,0 +1,67 @@
+"""Trip-count-aware HLO analyzer: validated against known-cost programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.hlo_analysis import analyze, shape_bytes
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert shape_bytes("bf16[2,3]{1,0}") == 12
+    assert shape_bytes("(f32[4]{0}, s32[2]{0})") == 16 + 8
+    assert shape_bytes("pred[10]{0}") == 10
+
+
+def test_scan_trip_count_multiplies_flops():
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    n = 10
+    c = _compile(scanned, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((n, 64, 64), jnp.float32))
+    cost = analyze(c.as_text())
+    expect = n * 2 * 64 ** 3
+    assert cost.flops == pytest.approx(expect, rel=0.01)
+    # and cost_analysis() itself counts the body once (the bug we correct)
+    assert c.cost_analysis()["flops"] == pytest.approx(expect / n, rel=0.01)
+
+
+def test_single_dot_flops():
+    c = _compile(lambda a, b: a @ b,
+                 jax.ShapeDtypeStruct((32, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((128, 16), jnp.float32))
+    cost = analyze(c.as_text())
+    assert cost.flops == pytest.approx(2 * 32 * 128 * 16, rel=0.01)
+
+
+def test_batched_dot_flops():
+    c = _compile(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                 jax.ShapeDtypeStruct((4, 32, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((4, 64, 16), jnp.float32))
+    cost = analyze(c.as_text())
+    assert cost.flops == pytest.approx(2 * 4 * 32 * 64 * 16, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def nested(x, ws):
+        def outer(c, _):
+            def inner(ci, w):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, ws)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    c = _compile(nested, jax.ShapeDtypeStruct((32, 32), jnp.float32),
+                 jax.ShapeDtypeStruct((5, 32, 32), jnp.float32))
+    cost = analyze(c.as_text())
+    assert cost.flops == pytest.approx(3 * 5 * 2 * 32 ** 3, rel=0.01)

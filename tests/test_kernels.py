@@ -1,0 +1,142 @@
+"""Per-kernel validation: shape/dtype sweeps, allclose vs the ref oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref as kref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.overscale_matmul import (bit_probs_to_cdf,
+                                            overscale_matmul, quantize)
+
+KEY = jax.random.PRNGKey(7)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,T,D", [(128, 128, 64), (256, 256, 128),
+                                       (384, 384, 64), (512, 512, 256)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, S, T, D, dtype):
+        q = jax.random.normal(jax.random.fold_in(KEY, 1), (S, D), dtype)
+        k = jax.random.normal(jax.random.fold_in(KEY, 2), (T, D), dtype)
+        v = jax.random.normal(jax.random.fold_in(KEY, 3), (T, D), dtype)
+        out = flash_attention(q, k, v, causal=True, bq=128, bk=128,
+                              interpret=True)
+        ref = kref.flash_attention_ref(q, k, v, causal=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (64, 128)])
+    def test_block_shapes(self, bq, bk):
+        S, D = 256, 64
+        q = jax.random.normal(jax.random.fold_in(KEY, 4), (S, D))
+        k = jax.random.normal(jax.random.fold_in(KEY, 5), (S, D))
+        v = jax.random.normal(jax.random.fold_in(KEY, 6), (S, D))
+        out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk,
+                              interpret=True)
+        ref = kref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_non_causal(self):
+        S, D = 128, 64
+        q, k, v = (jax.random.normal(jax.random.fold_in(KEY, i), (S, D))
+                   for i in range(3))
+        out = flash_attention(q, k, v, causal=False, interpret=True)
+        ref = kref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestMambaScan:
+    @pytest.mark.parametrize("S,H,P,N,chunk", [
+        (128, 4, 16, 32, 32), (256, 8, 32, 64, 64), (64, 2, 8, 16, 64),
+    ])
+    def test_matches_model_ssd(self, S, H, P, N, chunk):
+        b = 2
+        xh = jax.random.normal(jax.random.fold_in(KEY, 11), (b, S, H, P)) * 0.5
+        dt = jax.nn.softplus(
+            jax.random.normal(jax.random.fold_in(KEY, 12), (b, S, H)))
+        A = -jnp.exp(
+            jax.random.normal(jax.random.fold_in(KEY, 13), (H,)) * 0.3)
+        B = jax.random.normal(jax.random.fold_in(KEY, 14), (b, S, H, N)) * 0.3
+        Cm = jax.random.normal(jax.random.fold_in(KEY, 15), (b, S, H, N)) * 0.3
+        y_k = ops.mamba_scan_b(xh, dt, A, B, Cm, chunk=chunk)
+        y_r, _ = kref.mamba_scan_ref(xh, dt, A, B, Cm, chunk)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_matches_sequential_recurrence(self):
+        """Chunked kernel == step-by-step recurrent ground truth."""
+        S, H, P, N = 32, 2, 4, 8
+        xh = jax.random.normal(jax.random.fold_in(KEY, 21), (S, H, P)) * 0.5
+        dt = jax.nn.softplus(
+            jax.random.normal(jax.random.fold_in(KEY, 22), (S, H)))
+        A = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 23), (H,)) * 0.3)
+        B = jax.random.normal(jax.random.fold_in(KEY, 24), (S, H, N)) * 0.3
+        Cm = jax.random.normal(jax.random.fold_in(KEY, 25), (S, H, N)) * 0.3
+        y_k = mamba_scan(xh, dt, A, B, Cm, chunk=8, interpret=True)
+        # sequential oracle
+        s = np.zeros((H, P, N), np.float32)
+        ys = []
+        for t in range(S):
+            dA = np.exp(np.asarray(dt[t] * A))
+            s = s * dA[:, None, None] + np.einsum(
+                "h,hp,hn->hpn", np.asarray(dt[t]), np.asarray(xh[t]),
+                np.asarray(B[t]))
+            ys.append(np.einsum("hpn,hn->hp", s, np.asarray(Cm[t])))
+        np.testing.assert_allclose(np.asarray(y_k), np.stack(ys),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestOverscaleMatmul:
+    @pytest.mark.parametrize("M,K,N", [(64, 96, 80), (200, 128, 130),
+                                       (128, 256, 128)])
+    def test_matches_ref(self, M, K, N):
+        a = jax.random.randint(jax.random.fold_in(KEY, 31), (M, K), -128, 127,
+                               jnp.int8)
+        b = jax.random.randint(jax.random.fold_in(KEY, 32), (K, N), -128, 127,
+                               jnp.int8)
+        ug = jax.random.bits(jax.random.fold_in(KEY, 33), (M, N), jnp.uint32)
+        ub = jax.random.bits(jax.random.fold_in(KEY, 34), (M, N), jnp.uint32)
+        probs = np.zeros(32)
+        probs[24:] = 0.02
+        cdf = bit_probs_to_cdf(probs)
+        out_k = overscale_matmul(a, b, ug, ub, cdf, interpret=True)
+        out_r = kref.overscale_matmul_ref(a, b, ug, ub, cdf)
+        assert (np.asarray(out_k) == np.asarray(out_r)).all()
+
+    def test_zero_probs_is_exact_matmul(self):
+        M = K = N = 64
+        a = jax.random.randint(jax.random.fold_in(KEY, 41), (M, K), -128, 127,
+                               jnp.int8)
+        b = jax.random.randint(jax.random.fold_in(KEY, 42), (K, N), -128, 127,
+                               jnp.int8)
+        ug = jax.random.bits(jax.random.fold_in(KEY, 43), (M, N), jnp.uint32)
+        ub = jax.random.bits(jax.random.fold_in(KEY, 44), (M, N), jnp.uint32)
+        cdf = bit_probs_to_cdf(np.zeros(32))
+        out = overscale_matmul(a, b, ug, ub, cdf, interpret=True)
+        exact = a.astype(jnp.int32) @ b.astype(jnp.int32)
+        assert (np.asarray(out) == np.asarray(exact)).all()
+
+    def test_flip_rate_tracks_probability(self):
+        M = K = N = 256
+        a = jnp.ones((M, K), jnp.int8)
+        b = jnp.ones((K, N), jnp.int8)
+        ug = jax.random.bits(jax.random.fold_in(KEY, 51), (M, N), jnp.uint32)
+        ub = jax.random.bits(jax.random.fold_in(KEY, 52), (M, N), jnp.uint32)
+        probs = np.zeros(32)
+        probs[30] = 0.05
+        out = overscale_matmul(a, b, ug, ub, bit_probs_to_cdf(probs),
+                               interpret=True)
+        rate = float((np.asarray(out) != K).mean())
+        assert rate == pytest.approx(0.05, abs=0.01)
+
+    def test_quantize_roundtrip(self):
+        x = jax.random.normal(jax.random.fold_in(KEY, 61), (64, 64))
+        q, s = quantize(x)
+        np.testing.assert_allclose(np.asarray(q, np.float32) * float(s),
+                                   np.asarray(x), atol=float(s) * 0.51)

@@ -1,0 +1,119 @@
+"""Model correctness: decode==forward, blockwise attention, MoE invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.models import attention as A
+from repro.models import moe as moe_lib
+from repro.models.model import Model
+from repro.sharding.plan import make_plan
+
+DECODE_ARCHS = ["llama3.2-1b", "qwen3-1.7b", "mixtral-8x7b",
+                "deepseek-v2-236b", "mamba2-780m", "zamba2-1.2b",
+                "llama-3.2-vision-11b", "whisper-small"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = registry.get(arch).reduced().replace(
+        dtype="float32", param_dtype="float32", moe_capacity_factor=16.0)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, P = 2, 24, 16
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = 0.1 * jax.random.normal(
+            key, (B, cfg.num_image_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["audio_frames"] = 0.1 * jax.random.normal(
+            key, (B, cfg.encoder_frames, cfg.d_model))
+    full, _ = model.apply(params, batch)
+    pf = dict(batch)
+    pf["tokens"] = batch["tokens"][:, :P]
+    logits, cache = model.prefill(params, pf, max_len=S)
+    np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                               np.asarray(full[:, P - 1]), atol=2e-4)
+    for t in range(P, S):
+        logits, cache = model.decode(params, batch["tokens"][:, t:t + 1],
+                                     cache, t)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, t]), atol=2e-4,
+                                   err_msg=f"step {t}")
+
+
+def test_blockwise_attention_matches_naive():
+    key = jax.random.PRNGKey(0)
+    B, S, H, Hkv, D = 2, 256, 8, 4, 32
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, Hkv, D))
+    plan = make_plan(registry.get("llama3.2-1b").reduced())
+    for window in (0, 64):
+        ref = A._sdpa(q, k, v, A.causal_mask(S, S, 0, window), plan)
+        out = A.blockwise_sdpa(q, k, v, causal=True, window=window,
+                               q_block=64, kv_block=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-6)
+
+
+def test_sliding_window_ring_cache():
+    """SWA decode cache is a ring buffer shorter than the sequence."""
+    cfg = registry.get("mixtral-8x7b").reduced().replace(
+        dtype="float32", param_dtype="float32", sliding_window=8,
+        moe_capacity_factor=16.0)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    full, _ = model.apply(params, {"tokens": toks})
+    logits, cache = model.prefill(params, {"tokens": toks[:, :4]}, max_len=S)
+    assert cache["stack"]["k"].shape[2] == 8  # (L, B, T=window, hkv, dh)
+    for t in range(4, S):
+        logits, cache = model.decode(params, toks[:, t:t + 1], cache, t)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, t]), atol=2e-4,
+                                   err_msg=f"step {t}")
+
+
+class TestMoE:
+    def test_router_topk_weights_normalized(self):
+        key = jax.random.PRNGKey(0)
+        logits = jax.random.normal(key, (32, 8))
+        w, idx, aux, z = moe_lib.router_topk(logits, 2)
+        np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+        assert float(aux) >= 1.0 - 1e-5  # balance loss lower bound E*sum>=1
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 100))
+    def test_no_drop_moe_is_permutation_invariant(self, seed):
+        """With ample capacity, MoE output is per-token (permuting the batch
+        permutes the output)."""
+        cfg = registry.get("mixtral-8x7b").reduced().replace(
+            dtype="float32", param_dtype="float32", moe_capacity_factor=16.0)
+        plan = make_plan(cfg)
+        key = jax.random.PRNGKey(seed)
+        p = __import__("repro.models.params", fromlist=["materialize"]) \
+            .materialize(moe_lib.moe_params(cfg, plan), key, "float32")
+        x = jax.random.normal(jax.random.fold_in(key, 1), (1, 16, cfg.d_model))
+        out, _ = moe_lib.moe_apply(p, x, cfg, plan)
+        perm = jax.random.permutation(jax.random.fold_in(key, 2), 16)
+        out_p, _ = moe_lib.moe_apply(p, x[:, perm], cfg, plan)
+        np.testing.assert_allclose(np.asarray(out[:, perm]),
+                                   np.asarray(out_p), atol=1e-4)
+
+
+def test_rope_preserves_norm():
+    from repro.models.layers import apply_rope
+    cfg = registry.get("llama3.2-1b").reduced()
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 16, 4, 16))
+    pos = jnp.arange(16)[None]
+    y = apply_rope(x, pos, cfg)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)

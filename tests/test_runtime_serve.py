@@ -1,0 +1,114 @@
+"""TPU energy runtime policies + serving engine + error-tolerant apps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import runtime as RT
+from repro.core import tpu_fleet as TF
+from repro.models.model import Model
+from repro.serve.engine import Engine, Request
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                        collective_s=0.2)
+
+
+class TestEnergyRuntime:
+    def test_power_save_holds_contract(self, profile):
+        rt = RT.EnergyAwareRuntime(profile, policy="power_save")
+        p = rt.plan()
+        assert p.step_s == pytest.approx(profile.step_s)
+        assert 0.0 < p.saving < 0.5
+        assert p.t_max < TF.T_MAX_CHIP
+        assert (p.v_core <= TF.V_CORE_NOM + 1e-6).all()
+
+    def test_min_energy_beats_power_save(self, profile):
+        ps = RT.EnergyAwareRuntime(profile, policy="power_save").plan()
+        me = RT.EnergyAwareRuntime(profile, policy="min_energy").plan()
+        # energy metric: P x t
+        e_ps = ps.pod_power_w * profile.step_s
+        e_me = me.pod_power_w * me.step_s
+        assert e_me < e_ps
+        assert me.step_s > profile.step_s  # delay traded for energy
+
+    def test_overscale_saves_more_power(self, profile):
+        ps = RT.EnergyAwareRuntime(profile, policy="power_save").plan()
+        os_ = RT.EnergyAwareRuntime(profile, policy="overscale:1.2").plan()
+        assert os_.saving > ps.saving
+        assert os_.step_s == pytest.approx(profile.step_s)  # clock held
+
+    def test_dynamic_lut_monotone(self, profile):
+        rt = RT.EnergyAwareRuntime(profile, policy="power_save")
+        lut = rt.dynamic_lut([15.0, 30.0, 45.0])
+        vcs = [lut[t][0] for t in (15.0, 30.0, 45.0)]
+        assert all(b >= a - 1e-6 for a, b in zip(vcs, vcs[1:]))
+        assert vcs[-1] <= 0.75 + 1e-6
+
+    def test_straggler_boost_costs_power(self, profile):
+        rt = RT.EnergyAwareRuntime(profile, policy="power_save")
+        p = rt.plan()
+        rt.T = rt.T.at[37].set(88.0)
+        out = rt.straggler_mitigation(p, 37, 1.3)
+        assert out["action"] == "boost_rail"
+        assert out["extra_power_w"] > 0
+
+    def test_cold_pod_saves_more(self, profile):
+        hot = RT.EnergyAwareRuntime(profile, policy="power_save",
+                                    t_amb=40.0).plan()
+        cold = RT.EnergyAwareRuntime(profile, policy="power_save",
+                                     t_amb=10.0).plan()
+        assert cold.saving > hot.saving
+
+
+class TestServingEngine:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = registry.get("llama3.2-1b").reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        return cfg, model, params
+
+    def test_generates_requested_tokens(self, setup):
+        cfg, model, params = setup
+        eng = Engine(model, params, batch_slots=2, max_len=64)
+        for rid in range(3):
+            eng.submit(Request(rid, np.arange(4 + rid) % cfg.vocab_size,
+                               max_new=6))
+        done = eng.run()
+        assert len(done) == 3
+        for r in done:
+            assert 1 <= len(r.out) <= 6
+
+    def test_batched_equals_single(self, setup):
+        """Slot batching must not change greedy outputs."""
+        cfg, model, params = setup
+        prompt = np.arange(5) % cfg.vocab_size
+
+        def gen(slots):
+            eng = Engine(model, params, batch_slots=slots, max_len=64,
+                         eos_id=-1)
+            eng.submit(Request(0, prompt, max_new=5))
+            return eng.run()[0].out
+
+        assert gen(1) == gen(4)
+
+
+class TestApps:
+    def test_lenet_trains(self):
+        from repro.core import apps
+        p, info = apps.lenet_train(jax.random.PRNGKey(42), steps=300)
+        assert apps.lenet_accuracy(p, jax.random.PRNGKey(42), n=512) > 0.95
+
+    def test_hd_trains_and_degrades_gracefully(self):
+        from repro.core import apps
+        key = jax.random.PRNGKey(42)
+        hd = apps.hd_train(key)
+        clean = apps.hd_accuracy(hd, key)
+        noisy = apps.hd_accuracy(hd, key, flip_prob=0.30)
+        assert clean > 0.98
+        # paper [44]: ~4% drop at 30% bit flips
+        assert 0.003 < clean - noisy < 0.12

@@ -1,0 +1,187 @@
+"""Substrate tests: checkpoint, fault tolerance, data pipeline, optimizer."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, SyntheticLM, make_iterator
+from repro.ft.elastic import choose_mesh_shape
+from repro.ft.monitor import (FailureInjector, Heartbeat, StragglerDetector,
+                              TransientError, retry_step)
+from repro.train.optimizer import OptConfig, Optimizer, lr_schedule
+
+
+class TestCheckpoint:
+    def _tree(self, k=0):
+        return {"a": jnp.arange(12.0).reshape(3, 4) + k,
+                "b": {"c": jnp.ones((5,)) * k, "d": jnp.zeros((2, 2))}}
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        tree = self._tree(3)
+        mgr.save(7, tree, metadata={"arch": "x"})
+        restored, step = mgr.restore(self._tree(0))
+        assert step == 7
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                       np.asarray(b)),
+            tree, restored)
+
+    def test_async_save_and_fence(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        mgr.save(1, self._tree(1))
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_keep_last_prunes(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last=2, async_save=False)
+        for s in range(5):
+            mgr.save(s, self._tree(s))
+        assert mgr.all_steps() == [3, 4]
+
+    def test_corruption_detected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, self._tree(1))
+        npz = os.path.join(str(tmp_path), "step_00000001", "arrays.npz")
+        with open(npz, "r+b") as f:
+            f.seek(30)
+            f.write(b"\x00\x01\x02")
+        with pytest.raises(IOError, match="corrupt"):
+            mgr.restore(self._tree(0))
+
+    def test_restore_specific_step(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last=5, async_save=False)
+        for s in (2, 4, 6):
+            mgr.save(s, self._tree(s))
+        restored, step = mgr.restore(self._tree(0), step=4)
+        assert step == 4
+        assert float(restored["a"][0, 0]) == 4.0
+
+
+class TestFT:
+    def test_heartbeat_dead_set(self):
+        hb = Heartbeat(timeout_s=10.0)
+        hb.beat("w0", t=100.0)
+        hb.beat("w1", t=105.0)
+        assert hb.dead(now=112.0) == {"w0"}
+        assert hb.alive(now=112.0) == {"w1"}
+
+    def test_straggler_detection(self):
+        det = StragglerDetector(threshold=1.5, min_samples=8)
+        for i in range(10):
+            det.record("w0", i, 1.0)
+        ev = det.record("w0", 10, 2.0)
+        assert ev is not None and ev.ratio == pytest.approx(2.0)
+        assert det.record("w0", 11, 1.1) is None
+
+    def test_retry_then_succeed(self):
+        inj = FailureInjector(fail_at={0})
+        calls = []
+
+        def step():
+            inj.maybe_fail(0)
+            calls.append(1)
+            return "ok"
+
+        assert retry_step(step) == "ok"
+        assert len(calls) == 1
+
+    def test_retry_exhausted_raises(self):
+        def always_fail():
+            raise TransientError("boom")
+
+        with pytest.raises(TransientError):
+            retry_step(always_fail, max_retries=2)
+
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.integers(1, 4096), model=st.sampled_from([1, 2, 4, 8, 16]))
+    def test_choose_mesh_shape_valid(self, n, model):
+        data, m = choose_mesh_shape(n, model)
+        assert data * m <= n
+        assert data >= 1 and m >= 1
+
+
+class TestData:
+    def test_deterministic(self):
+        dc = DataConfig(vocab_size=128, seq_len=16, global_batch=4, seed=3)
+        a = SyntheticLM(dc).batch(5)
+        b = SyntheticLM(dc).batch(5)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+    def test_labels_shifted(self):
+        dc = DataConfig(vocab_size=128, seq_len=16, global_batch=2)
+        b = SyntheticLM(dc).batch(0)
+        # labels[t] is the successor of tokens[t]
+        np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                      np.asarray(b["labels"][:, :-1]))
+
+    def test_bigram_structure_learnable(self):
+        dc = DataConfig(vocab_size=64, seq_len=32, global_batch=4, branch=2)
+        src = SyntheticLM(dc)
+        b = src.batch(0)
+        toks, labels = np.asarray(b["tokens"]), np.asarray(b["labels"])
+        for t in range(dc.seq_len):
+            assert all(labels[i, t] in src.successors[toks[i, t]]
+                       for i in range(4))
+
+    def test_shards_distinct_and_deterministic(self):
+        dc = DataConfig(vocab_size=128, seq_len=16, global_batch=8)
+        src = SyntheticLM(dc)
+        s0 = src.batch(1, shard=0, n_shards=2)
+        s1 = src.batch(1, shard=1, n_shards=2)
+        assert s0["tokens"].shape == (4, 16)
+        assert not np.array_equal(np.asarray(s0["tokens"]),
+                                  np.asarray(s1["tokens"]))
+
+
+class TestOptimizer:
+    def _quad_loss(self, p):
+        return jnp.sum(jnp.square(p["w"] - 3.0)) + jnp.sum(
+            jnp.square(p["b"] + 1.0))
+
+    @pytest.mark.parametrize("kind", ["adamw", "adafactor"])
+    def test_converges_on_quadratic(self, kind):
+        oc = OptConfig(kind=kind, lr=0.1, warmup_steps=0, total_steps=10_000,
+                       weight_decay=0.0, grad_clip=100.0)
+        opt = Optimizer(oc)
+        params = {"w": jnp.zeros((4, 130)), "b": jnp.zeros((200, 140))}
+        state = opt.init(params)
+        for i in range(200):
+            grads = jax.grad(self._quad_loss)(params)
+            params, state, _ = opt.update(params, grads, state, i)
+        assert self._quad_loss(params) < 0.3
+
+    def test_grad_clip(self):
+        oc = OptConfig(grad_clip=1.0)
+        opt = Optimizer(oc)
+        params = {"w": jnp.zeros((4,))}
+        grads = {"w": jnp.full((4,), 100.0)}
+        state = opt.init(params)
+        _, _, metrics = opt.update(params, grads, state, 0)
+        assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+    def test_lr_schedule_shape(self):
+        oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        # warmup counts from 1 so step 0 trains (lr = lr/warmup)
+        assert float(lr_schedule(oc, jnp.int32(0))) == pytest.approx(0.1)
+        assert float(lr_schedule(oc, jnp.int32(9))) == pytest.approx(1.0)
+        assert float(lr_schedule(oc, jnp.int32(100))) == pytest.approx(0.0,
+                                                                       abs=1e-6)
+
+    def test_adafactor_memory_factored(self):
+        cfg = registry.get("deepseek-v2-236b")
+        oc = OptConfig(kind="adafactor")
+        opt = Optimizer(oc)
+        meta = {"w": __import__("repro.models.params",
+                                fromlist=["ParamMeta"]).ParamMeta(
+            (1024, 2048), (None, None))}
+        sm = opt.state_meta(meta)
+        assert sm["w"]["vr"].shape == (1024,)
+        assert sm["w"]["vc"].shape == (2048,)

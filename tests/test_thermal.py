@@ -1,0 +1,61 @@
+"""Thermal solver: theta_JA calibration, physics, kernel-vs-ref equality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import thermal
+from repro.core.thermal import ThermalConfig, conductances
+from repro.kernels import ops, ref as kref
+
+
+@pytest.mark.parametrize("theta", [2.0, 12.0])
+def test_theta_ja_calibration(theta):
+    """Paper setup: 1 W total -> mean junction rise == theta_JA."""
+    tc = ThermalConfig(theta_ja=theta)
+    m = n = 24
+    P = jnp.full((m * n,), 1000.0 / (m * n))
+    T = thermal.solve(P, m, n, 25.0, tc)
+    assert float(T.mean() - 25.0) == pytest.approx(theta, rel=0.02)
+
+
+def test_hotspot_peaks_above_mean():
+    tc = ThermalConfig(theta_ja=12.0)
+    P = jnp.zeros((32 * 32,)).at[32 * 16 + 16].set(1000.0)
+    T = thermal.solve(P, 32, 32, 25.0, tc)
+    assert float(T.max()) > float(T.mean()) + 50
+    # energy balance: mean rise still == theta (all heat exits vertically)
+    assert float(T.mean() - 25.0) == pytest.approx(12.0, rel=0.02)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(0.2, 5.0))
+def test_linearity(scale):
+    """Steady state is linear in power: T(c*P) - Tamb == c*(T(P) - Tamb)."""
+    tc = ThermalConfig(theta_ja=2.0)
+    rng = np.random.default_rng(0)
+    P = jnp.asarray(rng.uniform(0, 10, (16 * 16,)), jnp.float32)
+    T1 = thermal.solve(P, 16, 16, 25.0, tc)
+    T2 = thermal.solve(P * scale, 16, 16, 25.0, tc)
+    np.testing.assert_allclose(np.asarray(T2 - 25.0),
+                               np.asarray(T1 - 25.0) * scale,
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("m,n", [(8, 8), (16, 32), (92, 92)])
+@pytest.mark.parametrize("iters", [1, 17, 64])
+def test_stencil_kernel_matches_ref(m, n, iters):
+    tc = ThermalConfig(theta_ja=12.0)
+    g_v, g_lat = conductances(m, n, tc)
+    rng = np.random.default_rng(1)
+    T0 = jnp.asarray(rng.uniform(25, 40, (m, n)), jnp.float32)
+    P = jnp.asarray(rng.uniform(0, 5e-3, (m, n)), jnp.float32)
+    nbrc = jnp.full((m, n), 4.0).at[0, :].add(-1).at[-1, :].add(-1) \
+        .at[:, 0].add(-1).at[:, -1].add(-1)
+    diag = g_v + g_lat * nbrc
+    out_k = ops.thermal_sweep(T0, P, diag, g_lat=g_lat, g_v_tamb=g_v * 25.0,
+                              iters=iters)
+    out_r = kref.thermal_stencil_ref(T0, P, diag, g_lat, g_v * 25.0, iters)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
