@@ -80,3 +80,24 @@ def run(quick: bool = False) -> Dict:
     out["overscale_matmul_interpret_us"] = _time(
         lambda *a: ops.overscale_mm(*a), a8, b8, ug, ub, cdf)
     return out
+
+
+def main(argv=None) -> None:
+    """CI smoke entry: ``python benchmarks/kernels_bench.py --smoke``."""
+    import argparse
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes; assert every kernel runs")
+    args = ap.parse_args(argv)
+    res = run(quick=args.smoke)
+    for k, v in res.items():
+        print(f"{k},{v:.0f}")
+    assert all(v > 0 for v in res.values())
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ def main() -> None:
         ("fig7_energy", paper_figs.fig7_energy),
         ("fig8_overscaling", paper_figs.fig8_overscaling),
         ("tpu_runtime", paper_figs.tpu_runtime_bench),
+        ("dynamic_lut", paper_figs.dynamic_lut_bench),
         ("kernels", kernels_bench.run),
         ("roofline", roofline.run),
     ]
@@ -88,6 +89,10 @@ def _headline(name: str, res) -> str:
             t = res["train_compute_bound"]
             return (f"train: save={t['power_save']['saving']*100:.1f}% "
                     f"minE={t['min_energy']['saving']*100:.1f}%")
+        if name == "dynamic_lut":
+            return (f"match={res['match']} batch={res['wall_batch_s']}s "
+                    f"seq-run={res['wall_sequential_run_s']}s "
+                    f"(seed impl {res['seed_implementation_s']}s)")
         if name == "kernels":
             return f"{len(res)} timings"
         if name == "roofline":

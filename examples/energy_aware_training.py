@@ -12,6 +12,7 @@ dynamic-scheme lookup table (TSD -> rails) and a straggler-mitigation event.
 import jax
 import numpy as np
 
+from repro import policy as pol
 from repro.configs import registry
 from repro.core import runtime as RT
 from repro.core import tpu_fleet as TF
@@ -31,19 +32,22 @@ def main():
     it = make_iterator(cfg, DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                        global_batch=8, branch=2))
 
-    # profile from the dry-run roofline of the production workload
+    # profile from the dry-run roofline of the production workload;
+    # policies are first-class repro.policy objects (see DESIGN.md)
     prof = TF.StepProfile.from_roofline(compute_s=0.7, memory_s=0.4,
                                         collective_s=0.15)
-    runtimes = {p: RT.EnergyAwareRuntime(prof, policy=p)
-                for p in ("power_save", "min_energy", "overscale:1.2")}
+    runtimes = {name: RT.EnergyAwareRuntime(prof, policy=p)
+                for name, p in (("power_save", pol.PowerSave()),
+                                ("min_energy", pol.MinEnergy()),
+                                ("overscale:1.2", pol.Overscale(gamma=1.2)))}
 
     for i in range(10):
         params, opt_state, m = step(params, opt_state, next(it), i)
         if i % 3 == 0:
             line = f"step {i}: loss={float(m['loss']):.3f}"
-            for pol, rt in runtimes.items():
+            for name, rt in runtimes.items():
                 plan = rt.plan()
-                line += f" | {pol}: save={plan.saving*100:.0f}%"
+                line += f" | {name}: save={plan.saving*100:.0f}%"
             print(line)
 
     rt = runtimes["power_save"]

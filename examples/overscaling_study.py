@@ -1,9 +1,10 @@
 """Fig-8 study: voltage over-scaling on error-tolerant apps (LeNet + HD).
 
 Sweeps the timing-violation budget gamma, runs Algorithm 1 with the relaxed
-constraint on the FPGA-mapped app netlists, derives the bit-error profile
-from the violating-path population, and measures end accuracy through the
-error-injected int8 matmul.
+``Overscale`` policy on the FPGA-mapped app netlists (the whole gamma
+schedule is ONE batched ``repro.policy`` solve), derives the bit-error
+profile from the violating-path population, and measures end accuracy
+through the error-injected int8 matmul.
 
     PYTHONPATH=src python examples/overscaling_study.py [--quick]
 """
@@ -32,8 +33,8 @@ def main():
           f"{'saving':8s} {'accuracy':8s}")
     for stats, label in ((apps.LENET_STATS, "lenet"), (apps.HD_STATS, "hd")):
         nl = NL.generate(stats)
-        for g in gammas:
-            r = OS.run(nl, g, t_amb=40.0, tc=tc)
+        for r in OS.sweep(nl, gammas, t_amb=40.0, tc=tc):
+            g = r.gamma
             if label == "lenet":
                 acc = apps.lenet_accuracy(
                     p, key, bit_probs=apps.scale_bit_probs(r.bit_probs))

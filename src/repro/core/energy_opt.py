@@ -1,35 +1,32 @@
 """Algorithm 2 — Thermal-Aware Energy Optimization.
 
 For every (V_core, V_bram) pair, find the *maximum frequency* the thermal
-steady state allows (inner fixed point: d_max = T(netlist, T_grid, V) feeds
-power feeds temperature), then pick the pair minimizing
-E = P_total x d_max (power-delay product). §III-C proves running at max
-frequency is energy-optimal for a fixed voltage (leakage energy scales with
-time; dynamic energy does not).
+steady state allows (d_max = T(netlist, T_grid, V) feeds power feeds
+temperature), then pick the pair minimizing E = P_total x d_max
+(power-delay product). §III-C proves running at max frequency is
+energy-optimal for a fixed voltage (leakage energy scales with time;
+dynamic energy does not).
 
-Speed-ups from the paper (two orders of magnitude, 72 min -> 49 s):
-  1. prune any pair whose *initial-loop* energy (T = T_amb grid, before the
-     temperature feedback raises it) already exceeds the best refined energy —
-     the feedback only increases E, so the initial pass is a lower bound;
-  2. reuse the thermal solution of a previously-evaluated pair whose total
-     power is within 0.1/theta_JA (temperatures match to ~0.1 degC).
+The legacy implementation refined pairs one by one (72 min -> 49 s via the
+paper's pruning + thermal-reuse speed-ups).  This wrapper instead routes
+through the shared ``repro.policy.Solver`` (DESIGN.md): the ``MinEnergy``
+policy evaluates EVERY pair's (delay, power, energy) in one vectorized pass
+per fixed-point iteration, entirely inside ``lax.while_loop`` — the whole
+grid is "refined" simultaneously in a handful of thermal solves, which
+subsumes both paper speed-ups (``use_pruning`` is kept for API
+compatibility and ignored).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from dataclasses import dataclass
+from typing import Optional
 
 from repro.core import characterization as C
-from repro.core import netlist as NL
 from repro.core import thermal
 from repro.core.netlist import Netlist
-from repro.core.voltage_scaling import (T_GUARD, V_BRAM_GRID, V_CORE_GRID,
-                                        baseline_power)
+from repro.core.voltage_scaling import baseline_power
+from repro.policy import MinEnergy, cached_solver, fpga_substrate
 
 
 @dataclass
@@ -49,103 +46,41 @@ class EnergyResult:
     wall_s: float = 0.0
 
 
-def _initial_pass(lib, nlj, t_amb, act_in, vc_flat, vb_flat):
-    """Energy lower bound for all pairs at T = T_amb (vectorized)."""
-
-    def eval_pair(vc, vb):
-        T = jnp.full(nlj["tile_act"].shape, t_amb)
-        d = NL.crit_delay(lib, nlj, T + T_GUARD, vc, vb)
-        f_ghz = 1.0 / d
-        lkg, dyn = NL.tile_power(lib, nlj, T, vc, vb, f_ghz, act_in)
-        p = jnp.sum(lkg) + jnp.sum(dyn)
-        return d, p, p * d
-
-    return jax.vmap(eval_pair)(vc_flat, vb_flat)
-
-
-def _refine(lib, nlj, m, n, t_amb, act_in, vc, vb, tc,
-            delta_t=0.1, max_iters=8, thermal_cache=None):
-    """Inner fixed point for one pair; returns (d_max, P, E, iters)."""
-    n_tiles = m * n
-    T = jnp.full((n_tiles,), t_amb)
-    d = p = None
-    for it in range(max_iters):
-        d = NL.crit_delay(lib, nlj, T + T_GUARD, vc, vb)
-        f_ghz = 1.0 / d
-        lkg, dyn = NL.tile_power(lib, nlj, T, vc, vb, f_ghz, act_in)
-        p = float(jnp.sum(lkg) + jnp.sum(dyn))
-        # thermal-solution reuse (paper speed-up #2)
-        if thermal_cache is not None:
-            tol_mw = 0.1 / tc.theta_ja * 1000.0
-            hit = next((Tc for pc, Tc in thermal_cache
-                        if abs(pc - p) < tol_mw), None)
-            if hit is not None:
-                T_new = hit
-            else:
-                T_new = thermal.solve(lkg + dyn, m, n, t_amb, tc)
-                thermal_cache.append((p, T_new))
-        else:
-            T_new = thermal.solve(lkg + dyn, m, n, t_amb, tc)
-        if float(jnp.max(jnp.abs(T_new - T))) < delta_t:
-            T = T_new
-            break
-        T = T_new
-    d = float(NL.crit_delay(lib, nlj, T + T_GUARD, vc, vb))
-    return d, p, p * d, it + 1
+def _safe_div(num: float, den: float, default: float = 0.0) -> float:
+    """Guard the degenerate-loop hazards (zero refined pairs / zero delay)."""
+    return num / den if den else default
 
 
 def run(netlist: Netlist, t_amb: float, act_in: float = 1.0,
         tc: thermal.ThermalConfig = thermal.ThermalConfig(),
         lib: Optional[C.DeviceLibrary] = None,
-        use_pruning: bool = True) -> EnergyResult:
-    lib = lib or C.default_library()
-    nlj = netlist.as_jax()
-    n_tiles = netlist.n_tiles
+        use_pruning: bool = True,
+        delta_t: float = 0.1, max_iters: int = 8) -> EnergyResult:
     t0 = time.time()
+    sub = fpga_substrate(netlist, lib, tc)
+    solver = cached_solver(sub, MinEnergy(), delta_t, max(int(max_iters), 1))
+    sol = solver.solve({"t_amb": t_amb, "act": act_in})
 
-    vc = jnp.asarray(V_CORE_GRID, jnp.float32)
-    vb = jnp.asarray(V_BRAM_GRID, jnp.float32)
-    VC, VB = jnp.meshgrid(vc, vb, indexing="ij")
-    vc_flat, vb_flat = VC.reshape(-1), VB.reshape(-1)
+    vc, vb = sub.decode(sol.idx)
+    # legacy semantics: delay re-evaluated at the converged temperatures,
+    # power from the last search (the refine loop's final iteration)
+    d_opt = float(sol.d_final[0])
+    power = float(sol.power[0])
+    energy = power * d_opt
 
-    d0, p0, e0 = _initial_pass(lib, nlj, t_amb, act_in, vc_flat, vb_flat)
-    order = np.argsort(np.asarray(e0))
-
-    best = EnergyResult(0, 0, 0, 0, 0, np.inf, 0, 0, 0)
-    thermal_cache: List[Tuple[float, jnp.ndarray]] = []
-    n_refined = n_pruned = 0
-    t_refine_total = 0.0
-
-    for idx in order:
-        if use_pruning and float(e0[idx]) >= best.energy:
-            n_pruned = len(order) - n_refined
-            break  # sorted: all remaining pairs are pruned too
-        t_r = time.time()
-        d, p, e, _ = _refine(lib, nlj, netlist.m, netlist.n, t_amb, act_in,
-                             float(vc_flat[idx]), float(vb_flat[idx]), tc,
-                             thermal_cache=thermal_cache if use_pruning else None)
-        t_refine_total += time.time() - t_r
-        n_refined += 1
-        if e < best.energy:
-            best = EnergyResult(
-                v_core=float(vc_flat[idx]), v_bram=float(vb_flat[idx]),
-                d_opt_ns=d, d_worst_ns=0.0, power_mw=p, energy=e,
-                baseline_energy=0.0, saving=0.0, freq_ratio=0.0)
-
-    # baseline energy: nominal voltages at the worst-case clock
-    d_worst = float(NL.crit_delay(
-        lib, nlj, jnp.full((n_tiles,), C.T_MAX), C.V_CORE_NOM, C.V_BRAM_NOM))
+    d_worst = sub.d_worst
     base_p, _ = baseline_power(netlist, t_amb, act_in, tc, lib)
     base_e = base_p * d_worst
+    wall = time.time() - t0
 
-    best.d_worst_ns = d_worst
-    best.baseline_energy = base_e
-    best.saving = 1.0 - best.energy / base_e
-    best.freq_ratio = d_worst / best.d_opt_ns
-    best.n_refined = n_refined
-    best.n_pruned = n_pruned
-    best.wall_s = time.time() - t0
-    # estimated un-pruned runtime: every pair pays the average refine cost
-    avg = t_refine_total / max(n_refined, 1)
-    best.wall_full_est_s = avg * len(order)
-    return best
+    return EnergyResult(
+        v_core=float(vc[0]), v_bram=float(vb[0]),
+        d_opt_ns=d_opt, d_worst_ns=d_worst, power_mw=power, energy=energy,
+        baseline_energy=base_e,
+        saving=1.0 - _safe_div(energy, base_e, default=1.0),
+        freq_ratio=_safe_div(d_worst, d_opt),
+        # the batched solver sweeps the whole grid each iteration: report
+        # fixed-point iterations where the legacy flow reported pair counts
+        n_refined=int(sol.n_iters), n_pruned=0,
+        wall_full_est_s=wall, wall_s=wall,
+    )

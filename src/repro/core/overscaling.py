@@ -3,6 +3,10 @@
 For a violation budget gamma >= 1, Algorithm 1's timing constraint is relaxed
 to ``delay <= gamma * d_worst`` while the clock stays at d_worst — the
 obtained voltages are optimal for that allowed violation (the paper's flow).
+The search itself is the shared ``repro.policy.Solver`` with the
+``Overscale(gamma)`` policy (DESIGN.md); gamma rides in the solver
+environment, so :func:`sweep` evaluates a whole gamma schedule as ONE
+batched device call (``Solver.solve_batch``).
 
 The post-P&R *timing simulation* is replaced by a TPU-idiomatic functional
 error model (see DESIGN.md §2): gate-level simulation of an FPGA netlist
@@ -20,7 +24,7 @@ becomes an error-injection profile derived from the violating-path population:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +34,9 @@ from repro.core import characterization as C
 from repro.core import netlist as NL
 from repro.core import thermal
 from repro.core.netlist import Netlist
-from repro.core.voltage_scaling import T_GUARD, _pair_grids, _search, baseline_power
+from repro.core.voltage_scaling import baseline_power
+from repro.policy import Overscale, Policy, cached_solver, fpga_substrate
+from repro.policy.substrate import T_GUARD
 
 
 @dataclass
@@ -47,41 +53,62 @@ class OverscaleResult:
     t_junct: float = 0.0
 
 
+def _result(sub, sol, netlist, gamma, act_in, base) -> OverscaleResult:
+    vc, vb = sub.decode(sol.idx)
+    vc, vb = float(vc[0]), float(vb[0])
+    power = float(sol.power[0])
+    frac, overshoot, bit_probs = error_profile(
+        sub.lib, sub.nlj, netlist, jnp.asarray(sol.T), vc, vb, sub.d_worst,
+        act_in)
+    return OverscaleResult(
+        gamma=float(gamma), v_core=vc, v_bram=vb, power_mw=power,
+        baseline_mw=base, saving=1.0 - power / base,
+        frac_violating=frac, mean_overshoot=overshoot, bit_probs=bit_probs,
+        t_junct=float(np.mean(sol.T)))
+
+
 def run(netlist: Netlist, gamma: float, t_amb: float = 40.0,
         act_in: float = 1.0,
         tc: thermal.ThermalConfig = thermal.ThermalConfig(theta_ja=12.0),
         lib: Optional[C.DeviceLibrary] = None,
-        delta_t: float = 0.1, max_iters: int = 8) -> OverscaleResult:
-    """Algorithm 1 with relaxed constraint gamma * d_worst."""
-    lib = lib or C.default_library()
-    nlj = netlist.as_jax()
-    n_tiles = netlist.n_tiles
-    d_worst = float(NL.crit_delay(
-        lib, nlj, jnp.full((n_tiles,), C.T_MAX), C.V_CORE_NOM, C.V_BRAM_NOM))
-    f_ghz = 1.0 / d_worst  # clock unchanged: violations, not slowdown
-    _, _, vc_flat, vb_flat = _pair_grids()
+        delta_t: float = 0.1, max_iters: int = 8,
+        policy: Optional[Policy] = None) -> OverscaleResult:
+    """Algorithm 1 with relaxed constraint gamma * d_worst.
 
-    T = jnp.full((n_tiles,), float(t_amb))
-    vc = vb = None
-    for _ in range(max_iters):
-        vc, vb = _search(lib, nlj, T, f_ghz, act_in, d_worst * gamma,
-                         vc_flat, vb_flat)
-        lkg, dyn = NL.tile_power(lib, nlj, T, vc, vb, f_ghz, act_in)
-        T_new = thermal.solve(lkg + dyn, netlist.m, netlist.n, t_amb, tc)
-        done = float(jnp.max(jnp.abs(T_new - T))) < delta_t
-        T = T_new
-        if done:
-            break
-    power = float(jnp.sum(lkg) + jnp.sum(dyn))
+    A custom constraint ``policy`` (e.g. a pre-built ``Overscale``) may be
+    supplied; its gamma is superseded by the explicit ``gamma`` argument,
+    which always rides in the solver environment.
+    """
+    sub = fpga_substrate(netlist, lib, tc)
+    # gamma rides in the env (not the policy) so every budget reuses one
+    # compiled solver
+    solver = cached_solver(sub, policy or Overscale(), delta_t,
+                           max(int(max_iters), 1))
+    sol = solver.solve({"t_amb": t_amb, "act": act_in, "gamma": gamma})
     base, _ = baseline_power(netlist, t_amb, act_in, tc, lib)
+    return _result(sub, sol, netlist, gamma, act_in, base)
 
-    frac, overshoot, bit_probs = error_profile(
-        lib, nlj, netlist, T, float(vc), float(vb), d_worst, act_in)
-    return OverscaleResult(
-        gamma=gamma, v_core=float(vc), v_bram=float(vb), power_mw=power,
-        baseline_mw=base, saving=1.0 - power / base,
-        frac_violating=frac, mean_overshoot=overshoot, bit_probs=bit_probs,
-        t_junct=float(jnp.mean(T)))
+
+def sweep(netlist: Netlist, gammas, t_amb: float = 40.0, act_in: float = 1.0,
+          tc: thermal.ThermalConfig = thermal.ThermalConfig(theta_ja=12.0),
+          lib: Optional[C.DeviceLibrary] = None,
+          delta_t: float = 0.1, max_iters: int = 8
+          ) -> List[OverscaleResult]:
+    """Gamma sweep as one batched fixed-point call (§III-D study)."""
+    gammas = [float(x) for x in gammas]
+    g = np.asarray(gammas, np.float32)
+    sub = fpga_substrate(netlist, lib, tc)
+    solver = cached_solver(sub, Overscale(), delta_t, max(int(max_iters), 1))
+    sol = solver.solve_batch({
+        "t_amb": np.full_like(g, t_amb),
+        "act": np.full_like(g, act_in),
+        "gamma": g,
+    })
+    base, _ = baseline_power(netlist, t_amb, act_in, tc, lib)
+    # report the exact requested gammas, not their float32 round-trips
+    return [_result(sub, jax.tree_util.tree_map(lambda x: x[i], sol),
+                    netlist, gammas[i], act_in, base)
+            for i in range(len(g))]
 
 
 def error_profile(lib, nlj, netlist: Netlist, T_tiles, v_core, v_bram,
@@ -109,7 +136,3 @@ def error_profile(lib, nlj, netlist: Netlist, T_tiles, v_core, v_bram,
             lo = word_bits - depth
             bit_probs[lo:] += act / len(d)
     return frac, overshoot, np.clip(bit_probs, 0.0, 1.0)
-
-
-def sweep(netlist: Netlist, gammas, **kw) -> List[OverscaleResult]:
-    return [run(netlist, float(g), **kw) for g in gammas]

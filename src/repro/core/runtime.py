@@ -11,21 +11,26 @@ First-class trainer/server feature (launch/train.py --energy-policy ...):
 - ``overscale:g`` (§III-D): relaxes the contract by g for error-tolerant
   training; the overscale error profile is exposed for gradient injection.
 
+The planning loop is the shared ``repro.policy.Solver`` over a
+``TpuFleetSubstrate`` (DESIGN.md §2) — the same Substrate/Policy/Solver
+stack that runs the FPGA flows.  ``policy`` accepts either the legacy spec
+string above or a ``repro.policy.Policy`` instance directly.
+
 On CPU this is a simulation (no rails to program), but the control layer —
 telemetry ingestion, planning, thermal feedback, straggler tie-in — is the
 real, tested code a TPU deployment would drive VIDs with.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import thermal
 from repro.core import tpu_fleet as TF
+from repro import policy as pol
 
 
 @dataclass
@@ -43,102 +48,68 @@ class PlanOut:
 
 
 class EnergyAwareRuntime:
-    def __init__(self, profile: TF.StepProfile, policy: str = "power_save",
+    def __init__(self, profile: TF.StepProfile,
+                 policy: Union[str, pol.Policy] = "power_save",
                  grid: Tuple[int, int] = (16, 16), t_amb: float = 25.0,
                  lib: Optional[TF.TpuLibrary] = None,
                  theta_chip: float = 0.20):
         self.lib = lib or TF.TpuLibrary()
         self.prof = profile
-        self.policy = policy
+        self.policy_obj = pol.from_spec(policy)
+        self.gamma = self.policy_obj.gamma
+        # legacy string attribute ("power_save" | "min_energy" | "overscale")
+        # honoured for Policy-object construction too
+        _spec_names = {pol.Overscale: "overscale", pol.MinEnergy: "min_energy",
+                       pol.PowerSave: "power_save"}
+        self.policy = _spec_names.get(type(self.policy_obj),
+                                      type(self.policy_obj).__name__)
         self.m, self.n = grid
         self.t_amb = t_amb
-        self.tc = TF.pod_thermal_config(theta_chip, self.m * self.n)
-        self.gamma = 1.0
-        if policy.startswith("overscale:"):
-            self.gamma = float(policy.split(":")[1])
-            self.policy = "overscale"
-        self.T = jnp.full((self.m * self.n,), t_amb + 25.0)  # warm estimate
+        self.substrate = pol.tpu_substrate(profile, self.lib, grid,
+                                           theta_chip)
+        self.tc = self.substrate.thermal_cfg
+        self.T = self.substrate.T0({"t_amb": t_amb})  # warm estimate
         self.history: List[Dict] = []
-        # voltage grids
-        self.vc_grid = jnp.asarray(np.arange(0.55, TF.V_CORE_NOM + 0.001, 0.01),
-                                   jnp.float32)
-        self.vs_grid = jnp.asarray(np.arange(0.60, TF.V_SRAM_NOM + 0.001, 0.01),
-                                   jnp.float32)
 
     # ------------------------------------------------------------------
-    def _search_chip(self, T_chips, util_scale):
-        """Vectorized per-chip (v_core, v_sram[, f]) search."""
-        lib, prof = self.lib, self.prof
-        VC, VS = jnp.meshgrid(self.vc_grid, self.vs_grid, indexing="ij")
-        vc_flat, vs_flat = VC.reshape(-1), VS.reshape(-1)  # (P,)
+    def _env(self, util_scale) -> Dict:
+        chips = self.m * self.n
+        us = np.asarray(util_scale if util_scale is not None
+                        else np.ones(chips), np.float32)
+        return {"t_amb": self.t_amb, "util": us, "gamma": self.gamma}
 
-        def per_chip(T, us):
-            fmax = TF.f_max_rel(lib, vc_flat, vs_flat, T + 2.0)  # T guard
-            if self.policy in ("power_save", "overscale"):
-                # hold nominal clock; margin budget = gamma
-                feasible = fmax >= 1.0 / self.gamma
-                p = TF.chip_power(lib, prof, vc_flat, vs_flat, 1.0, T) * us
-                p = jnp.where(feasible, p, jnp.inf)
-                i = jnp.argmin(p)
-                # no margin at this temperature -> stay at nominal rails
-                ok = jnp.any(feasible)
-                vc = jnp.where(ok, vc_flat[i], TF.V_CORE_NOM)
-                vs = jnp.where(ok, vs_flat[i], TF.V_SRAM_NOM)
-                p_nom = TF.chip_power(lib, prof, TF.V_CORE_NOM, TF.V_SRAM_NOM,
-                                      1.0, T) * us
-                return vc, vs, jnp.float32(1.0), jnp.where(ok, p[i], p_nom)
-            # min_energy: run at the pair's own max frequency
-            f = jnp.minimum(fmax, 1.0)
-            t = TF.step_time(prof, f) / prof.step_s
-            p = TF.chip_power(lib, prof, vc_flat, vs_flat, f, T) * us
-            e = p * t
-            i = jnp.argmin(e)
-            return vc_flat[i], vs_flat[i], f[i], p[i]
-
-        return jax.vmap(per_chip)(T_chips, util_scale)
-
-    # ------------------------------------------------------------------
     def plan(self, util_scale: Optional[np.ndarray] = None,
              max_iters: int = 6, delta_t: float = 0.5) -> PlanOut:
         """Fixed point: choose rails -> thermal solve -> repeat."""
-        chips = self.m * self.n
-        us = jnp.asarray(util_scale if util_scale is not None
-                         else np.ones(chips), jnp.float32)
-        T = self.T
-        for _ in range(max_iters):
-            vc, vs, f, p = self._search_chip(T, us)
-            T_new = thermal.solve(p * 1e3, self.m, self.n, self.t_amb, self.tc)
-            done = float(jnp.max(jnp.abs(T_new - T))) < delta_t
-            T = T_new
-            if done:
-                break
-        self.T = T
-        # baseline: nominal rails at its own fixed point
-        Tb = jnp.full((chips,), self.t_amb + 25.0)
-        for _ in range(max_iters):
-            pb = TF.chip_power(self.lib, self.prof,
-                               jnp.full((chips,), TF.V_CORE_NOM),
-                               jnp.full((chips,), TF.V_SRAM_NOM), 1.0, Tb) * us
-            Tb_new = thermal.solve(pb * 1e3, self.m, self.n, self.t_amb, self.tc)
-            if float(jnp.max(jnp.abs(Tb_new - Tb))) < delta_t:
-                Tb = Tb_new
-                break
-            Tb = Tb_new
-        f_pod = float(jnp.min(f))  # synchronous step: slowest chip rules
+        env = self._env(util_scale)
+        solver = pol.cached_solver(self.substrate, self.policy_obj,
+                                   delta_t, max_iters)
+        sol = solver.solve(env, T0=self.T)
+        self.T = jnp.asarray(sol.T)
+
+        # baseline: nominal rails at their own fixed point (fresh warm start)
+        bsolver = pol.cached_solver(self.substrate.nominal_only(),
+                                    pol.PowerSave(), delta_t, max_iters)
+        bsol = bsolver.solve(env)
+        pb = bsol.power  # legacy: last-search power, not re-evaluated
+
+        vc, vs = self.substrate.decode(sol.idx)
+        f = np.asarray(sol.f)
+        p = np.asarray(sol.power)
+        f_pod = float(f.min())  # synchronous step: slowest chip rules
         step_s = float(TF.step_time(self.prof, f_pod))
-        if self.policy == "min_energy":
+        if self.policy_obj.metric == "energy":
             # energy-per-step ratio (P x t), the paper's Algorithm-2 metric
-            saving = 1.0 - (float(jnp.sum(p)) * step_s) / (
-                float(jnp.sum(pb)) * self.prof.step_s)
+            saving = 1.0 - (float(p.sum()) * step_s) / (
+                float(pb.sum()) * self.prof.step_s)
         else:
-            saving = 1.0 - float(jnp.sum(p)) / float(jnp.sum(pb))
+            saving = 1.0 - float(p.sum()) / float(pb.sum())
         out = PlanOut(
-            v_core=np.asarray(vc), v_sram=np.asarray(vs), f_rel=np.asarray(f),
-            power_w=np.asarray(p), step_s=step_s,
-            pod_power_w=float(jnp.sum(p)),
-            baseline_power_w=float(jnp.sum(pb)),
+            v_core=vc, v_sram=vs, f_rel=f, power_w=p, step_s=step_s,
+            pod_power_w=float(p.sum()),
+            baseline_power_w=float(pb.sum()),
             saving=saving,
-            t_mean=float(jnp.mean(T)), t_max=float(jnp.max(T)),
+            t_mean=float(np.mean(sol.T)), t_max=float(np.max(sol.T)),
         )
         self.history.append({"saving": out.saving, "t_max": out.t_max,
                              "step_s": out.step_s})
@@ -146,16 +117,26 @@ class EnergyAwareRuntime:
 
     # ------------------------------------------------------------------
     def dynamic_lut(self, t_ambs) -> Dict[float, Tuple[float, float]]:
-        """Paper §III-B dynamic scheme: per-ambient (v_core, v_sram) medians."""
+        """Paper §III-B dynamic scheme: per-ambient (v_core, v_sram) medians.
+
+        One batched solve over the ambient sweep; runtime state (``t_amb``,
+        the warm temperature estimate ``T``) is not touched, so subsequent
+        ``plan()`` calls are unaffected.
+        """
+        chips = self.m * self.n
+        t = np.asarray([float(x) for x in t_ambs], np.float32)
+        B = len(t)
+        solver = pol.cached_solver(self.substrate, self.policy_obj,
+                                   delta_t=0.5, max_iters=6)
+        sol = solver.solve_batch({
+            "t_amb": t,
+            "util": np.ones((B, chips), np.float32),
+            "gamma": np.full((B,), self.gamma, np.float32),
+        })
         out = {}
-        keep = self.t_amb
-        for t in t_ambs:
-            self.t_amb = float(t)
-            self.T = jnp.full((self.m * self.n,), t + 25.0)
-            p = self.plan()
-            out[float(t)] = (float(np.median(p.v_core)),
-                             float(np.median(p.v_sram)))
-        self.t_amb = keep
+        for i in range(B):
+            vc, vs = self.substrate.decode(sol.idx[i])
+            out[float(t[i])] = (float(np.median(vc)), float(np.median(vs)))
         return out
 
     # ------------------------------------------------------------------

@@ -8,14 +8,16 @@ Fixed-point loop:
   3. run the thermal solver on the resulting per-tile power
   4. repeat until ||dT||_inf < delta_T
 
-The (V_core x V_bram) search is fully vectorized (vmap over the voltage
-grid); after the first iteration the search can be restricted to the
-neighbourhood of the previous solution (the paper's O(1) refinement) — both
-modes are implemented and timed.
+This module is a thin wrapper over :mod:`repro.policy` (see DESIGN.md): the
+whole loop — including the vectorized (V_core x V_bram) grid search and the
+paper's O(1) boundary refinement — runs jitted inside the shared
+``policy.Solver`` (a single ``lax.while_loop``; d_worst computed once and
+cached on the substrate).
 
 Static scheme: run at the worst-case ambient + activity -> one (V_core,
-V_bram). Dynamic scheme: precompute a T_amb -> (V_core, V_bram) lookup table
-for the on-line TSD-driven controller (paper §III-B).
+V_bram). Dynamic scheme: ``dynamic_lut`` precomputes the T_amb -> (V_core,
+V_bram) table for the on-line TSD-driven controller (paper §III-B) as ONE
+batched ``Solver.solve_batch`` device call.
 """
 from __future__ import annotations
 
@@ -23,17 +25,18 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import characterization as C
-from repro.core import netlist as NL
 from repro.core import thermal
 from repro.core.netlist import Netlist
+from repro.policy import (PowerSave, cached_solver, fpga_substrate)
+from repro.policy.substrate import T_GUARD, V_BRAM_GRID, V_CORE_GRID  # noqa: F401  (re-exported legacy constants)
 
-V_CORE_GRID = np.round(np.arange(0.55, 0.801, 0.01), 3)
-V_BRAM_GRID = np.round(np.arange(0.55, 0.951, 0.01), 3)
+#: the legacy boundary search window: +-20 mV (2 grid steps) around the
+#: previous solution after the first iteration
+REFINE_WINDOW_V = 0.021
 
 
 @dataclass
@@ -60,97 +63,42 @@ class VSResult:
     converged: bool = True
 
 
-def _pair_grids(v_core_grid=None, v_bram_grid=None):
-    vc = jnp.asarray(v_core_grid if v_core_grid is not None else V_CORE_GRID,
-                     jnp.float32)
-    vb = jnp.asarray(v_bram_grid if v_bram_grid is not None else V_BRAM_GRID,
-                     jnp.float32)
-    VC, VB = jnp.meshgrid(vc, vb, indexing="ij")
-    return vc, vb, VC.reshape(-1), VB.reshape(-1)
-
-
-T_GUARD = 2.0  # degC guard on timing eval (TSD error / spatial gradients, §III-B)
-
-
-def _search(lib, nlj, T_tiles, f_ghz, act_in, d_worst, vc_flat, vb_flat):
-    """Min-power feasible pair over the (flattened) voltage grid."""
-
-    def eval_pair(vc, vb):
-        d = NL.crit_delay(lib, nlj, T_tiles + T_GUARD, vc, vb)
-        lkg, dyn = NL.tile_power(lib, nlj, T_tiles, vc, vb, f_ghz, act_in)
-        return d, jnp.sum(lkg) + jnp.sum(dyn)
-
-    d_all, p_all = jax.vmap(eval_pair)(vc_flat, vb_flat)
-    feasible = d_all <= d_worst * (1.0 + 1e-6)
-    p_masked = jnp.where(feasible, p_all, jnp.inf)
-    idx = jnp.argmin(p_masked)
-    any_feasible = jnp.any(feasible)
-    # fallback: nominal voltages (always feasible by construction of d_worst)
-    vc = jnp.where(any_feasible, vc_flat[idx], C.V_CORE_NOM)
-    vb = jnp.where(any_feasible, vb_flat[idx], C.V_BRAM_NOM)
-    return vc, vb
-
-
-_search_jit = jax.jit(_search, static_argnums=())
-
-
 def run(netlist: Netlist, t_amb: float, act_in: float = 1.0,
         tc: thermal.ThermalConfig = thermal.ThermalConfig(),
         lib: Optional[C.DeviceLibrary] = None,
         delta_t: float = 0.1, max_iters: int = 10,
         boundary_search: bool = True) -> VSResult:
-    """Algorithm 1. ``act_in``: worst-case primary-input activity."""
-    lib = lib or C.default_library()
-    nlj = netlist.as_jax()
-    n_tiles = netlist.n_tiles
+    """Algorithm 1. ``act_in``: worst-case primary-input activity.
 
-    d_worst = float(NL.crit_delay(
-        lib, nlj, jnp.full((n_tiles,), C.T_MAX), C.V_CORE_NOM, C.V_BRAM_NOM))
-    f_ghz = 1.0 / d_worst  # clock period stays d_worst throughout
+    ``max_iters < 1`` is clamped to one iteration (a zero-iteration loop has
+    no solution to report); the result is then marked unconverged unless the
+    very first thermal update already met ``delta_t``.
+    """
+    sub = fpga_substrate(netlist, lib, tc)
+    solver = cached_solver(
+        sub, PowerSave(), delta_t, max(int(max_iters), 1),
+        refine_window=REFINE_WINDOW_V if boundary_search else None)
+    t0 = time.time()
+    sol = solver.solve({"t_amb": t_amb, "act": act_in})
+    wall = time.time() - t0
 
-    vc_g, vb_g, vc_flat, vb_flat = _pair_grids()
-    T = jnp.full((n_tiles,), float(t_amb))
-    trace: List[IterRecord] = []
-    vc = vb = None
-    converged = False
+    n_it = int(sol.n_iters)
+    vcs, vbs = sub.decode(sol.idx_hist[:n_it, 0])
+    trace = [IterRecord(i + 1, float(vcs[i]), float(vbs[i]),
+                        float(sol.p_hist[i]), float(sol.tj_hist[i]),
+                        wall / n_it)
+             for i in range(n_it)]
 
-    for it in range(max_iters):
-        t0 = time.time()
-        if it > 0 and boundary_search:
-            # O(1) refinement: +-20 mV window around the previous solution
-            sel_c = jnp.asarray(
-                [v for v in np.asarray(vc_g) if abs(v - vc_prev) <= 0.021],
-                jnp.float32)
-            sel_b = jnp.asarray(
-                [v for v in np.asarray(vb_g) if abs(v - vb_prev) <= 0.021],
-                jnp.float32)
-            VC, VB = jnp.meshgrid(sel_c, sel_b, indexing="ij")
-            vc, vb = _search(lib, nlj, T, f_ghz, act_in, d_worst,
-                             VC.reshape(-1), VB.reshape(-1))
-        else:
-            vc, vb = _search(lib, nlj, T, f_ghz, act_in, d_worst,
-                             vc_flat, vb_flat)
-        vc_prev, vb_prev = float(vc), float(vb)
-        lkg, dyn = NL.tile_power(lib, nlj, T, vc, vb, f_ghz, act_in)
-        T_new = thermal.solve(lkg + dyn, netlist.m, netlist.n, t_amb, tc)
-        p_total = float(jnp.sum(lkg) + jnp.sum(dyn))
-        trace.append(IterRecord(it + 1, vc_prev, vb_prev, p_total,
-                                float(jnp.mean(T_new)), time.time() - t0))
-        dT = float(jnp.max(jnp.abs(T_new - T)))
-        T = T_new
-        if dT < delta_t:
-            converged = True
-            break
-
-    # baseline: nominal voltages, same thermal fixed point
-    baseline_mw, T_base = baseline_power(netlist, t_amb, act_in, tc, lib)
-
+    baseline_mw, _ = baseline_power(netlist, t_amb, act_in, tc, lib,
+                                    max_iters=10, delta_t=delta_t)
+    power = trace[-1].power_mw
     return VSResult(
-        v_core=vc_prev, v_bram=vb_prev, power_mw=trace[-1].power_mw,
+        v_core=trace[-1].v_core, v_bram=trace[-1].v_bram, power_mw=power,
         baseline_mw=baseline_mw,
-        saving=1.0 - trace[-1].power_mw / baseline_mw,
-        t_junct_mean=float(jnp.mean(T)), t_junct_max=float(jnp.max(T)),
-        d_worst_ns=d_worst, trace=trace, converged=converged,
+        saving=1.0 - power / baseline_mw,
+        t_junct_mean=float(jnp.mean(sol.T)),
+        t_junct_max=float(jnp.max(sol.T)),
+        d_worst_ns=sub.d_worst, trace=trace, converged=bool(sol.converged),
     )
 
 
@@ -158,24 +106,11 @@ def baseline_power(netlist: Netlist, t_amb: float, act_in: float,
                    tc: thermal.ThermalConfig, lib=None,
                    max_iters: int = 10, delta_t: float = 0.1):
     """Nominal-voltage power at its own thermal fixed point."""
-    lib = lib or C.default_library()
-    nlj = netlist.as_jax()
-    n_tiles = netlist.n_tiles
-    d_worst = float(NL.crit_delay(
-        lib, nlj, jnp.full((n_tiles,), C.T_MAX), C.V_CORE_NOM, C.V_BRAM_NOM))
-    f_ghz = 1.0 / d_worst
-    T = jnp.full((n_tiles,), float(t_amb))
-    for _ in range(max_iters):
-        lkg, dyn = NL.tile_power(lib, nlj, T, C.V_CORE_NOM, C.V_BRAM_NOM,
-                                 f_ghz, act_in)
-        T_new = thermal.solve(lkg + dyn, netlist.m, netlist.n, t_amb, tc)
-        if float(jnp.max(jnp.abs(T_new - T))) < delta_t:
-            T = T_new
-            break
-        T = T_new
-    lkg, dyn = NL.tile_power(lib, nlj, T, C.V_CORE_NOM, C.V_BRAM_NOM,
-                             f_ghz, act_in)
-    return float(jnp.sum(lkg) + jnp.sum(dyn)), T
+    sub = fpga_substrate(netlist, lib, tc).nominal_only()
+    solver = cached_solver(sub, PowerSave(), delta_t, max(int(max_iters), 1))
+    sol = solver.solve({"t_amb": t_amb, "act": act_in})
+    # legacy semantics: power re-evaluated at the converged temperatures
+    return float(sol.p_final[0]), sol.T
 
 
 def dynamic_lut(netlist: Netlist, t_ambs, act_in: float = 1.0,
@@ -184,9 +119,14 @@ def dynamic_lut(netlist: Netlist, t_ambs, act_in: float = 1.0,
     """The on-line scheme's lookup table: T_amb -> (V_core, V_bram).
 
     Loaded at configure time; the TSD reading (1 ms resolution, paper [38])
-    indexes it and the on-chip regulator applies the pair (paper [39])."""
-    out = {}
-    for t in t_ambs:
-        r = run(netlist, float(t), act_in, tc, lib)
-        out[float(t)] = (r.v_core, r.v_bram)
-    return out
+    indexes it and the on-chip regulator applies the pair (paper [39]).
+    The whole ambient sweep is ONE batched device call (Solver.solve_batch).
+    """
+    sub = fpga_substrate(netlist, lib, tc)
+    solver = cached_solver(sub, PowerSave(), 0.1, 10,
+                           refine_window=REFINE_WINDOW_V)
+    t = np.asarray([float(x) for x in t_ambs], np.float32)
+    sol = solver.solve_batch({"t_amb": t, "act": np.full_like(t, act_in)})
+    vc, vb = sub.decode(sol.idx[:, 0])
+    return {float(t[i]): (float(vc[i]), float(vb[i]))
+            for i in range(len(t))}

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import policy as pol
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import registry
 from repro.core import runtime as energy_rt
@@ -101,12 +102,14 @@ def main(argv=None):
         fail_at={args.inject_failure_at} if args.inject_failure_at >= 0 else set())
     straggler = StragglerDetector()
 
-    # paper technique: fleet energy controller fed by the step profile
+    # paper technique: fleet energy controller fed by the step profile;
+    # the CLI spec becomes a first-class repro.policy Policy object
     rt: Optional[energy_rt.EnergyAwareRuntime] = None
     if args.energy_policy != "off":
         prof = TF.StepProfile.from_roofline(
             compute_s=0.7, memory_s=0.4, collective_s=0.15)
-        rt = energy_rt.EnergyAwareRuntime(prof, policy=args.energy_policy)
+        rt = energy_rt.EnergyAwareRuntime(
+            prof, policy=pol.from_spec(args.energy_policy))
 
     step = start_step
     t_train0 = time.time()

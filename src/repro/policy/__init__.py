@@ -1,0 +1,29 @@
+"""repro.policy — one Substrate/Policy/Solver stack for every thermal-aware
+flow in the repo (see DESIGN.md).
+
+    from repro import policy as pol
+
+    sub = pol.fpga_substrate(netlist, tc=thermal.ThermalConfig(theta_ja=12.0))
+    sol = pol.cached_solver(sub, pol.PowerSave()).solve(
+        {"t_amb": 60.0, "act": 1.0})
+    v_core, v_bram = sub.decode(sol.idx)
+
+Legacy entry points (``core.voltage_scaling.run``, ``core.energy_opt.run``,
+``core.overscaling.run``, ``core.runtime.EnergyAwareRuntime``) are thin
+wrappers over this API and keep their result dataclasses.
+"""
+from repro.policy.policies import (MinEnergy, Overscale, Policy, PowerSave,
+                                   from_spec)
+from repro.policy.solver import Solution, Solver, cached_solver
+from repro.policy.substrate import (T_GUARD, V_BRAM_GRID, V_CORE_GRID,
+                                    FpgaNetlistSubstrate, Substrate,
+                                    TpuFleetSubstrate, fpga_substrate,
+                                    tpu_substrate)
+
+__all__ = [
+    "Policy", "PowerSave", "MinEnergy", "Overscale", "from_spec",
+    "Solver", "Solution", "cached_solver",
+    "Substrate", "FpgaNetlistSubstrate", "TpuFleetSubstrate",
+    "fpga_substrate", "tpu_substrate",
+    "T_GUARD", "V_CORE_GRID", "V_BRAM_GRID",
+]

@@ -1,0 +1,111 @@
+"""Policy objects — the paper's three objectives over one substrate.
+
+A :class:`Policy` declares, over the substrate's candidate grid,
+
+- ``frequency``: the clock each candidate would run at,
+- ``feasible``:  the timing constraint (vs the substrate's ``d_worst``),
+- ``objective``: the quantity the Solver minimizes per selection domain.
+
+All three are traceable and broadcast over the ``(domains, candidates)``
+evaluation arrays, so the Solver's entire search -> thermal -> repeat loop
+stays inside one ``lax.while_loop``.
+
+Paper mapping (DESIGN.md §1):
+
+- :class:`PowerSave`  — Algorithm 1 (§III-A): hold the guardbanded clock,
+  minimize total power subject to ``delay <= d_worst``.
+- :class:`Overscale`  — §III-D: Algorithm 1 with the constraint relaxed to
+  ``delay <= gamma * d_worst`` while the clock stays at ``d_worst``
+  (violations become bit errors, not slowdown).
+- :class:`MinEnergy`  — Algorithm 2 (§III-C): every candidate runs at its
+  own maximum frequency ``f = f_nom * d_worst / delay`` (capped by the
+  substrate); minimize energy ``P x exec_time(f)``.
+
+``gamma`` is read from ``env`` when present so gamma-sweeps batch through
+``Solver.solve_batch`` as a single device call.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Policy:
+    """Base: feasibility at gamma, nominal clock, minimize power."""
+
+    gamma: float = 1.0
+    #: which ratio the fleet runtime reports as "saving"
+    metric: str = "power"  # "power" | "energy"
+    #: route infeasible domains to the nominal candidate (Algorithm 1's
+    #: "no margin at this temperature -> stay at nominal rails")
+    nominal_fallback: bool = True
+
+    def _gamma(self, env):
+        return env.get("gamma", jnp.asarray(self.gamma, jnp.float32))
+
+    def frequency(self, sub, d, env):
+        """Clock per (domain, candidate); constraint policies hold f_nom."""
+        return jnp.broadcast_to(jnp.asarray(sub.f_nom, jnp.float32), d.shape)
+
+    def feasible(self, sub, d, env):
+        return d <= sub.d_worst * self._gamma(env) * (1.0 + 1e-6)
+
+    def objective(self, sub, d, p, f, env):
+        return p
+
+
+@dataclass(frozen=True)
+class PowerSave(Policy):
+    """Algorithm 1 — minimum power at the guardbanded clock."""
+
+
+@dataclass(frozen=True)
+class Overscale(Policy):
+    """§III-D — Algorithm 1 with the timing budget relaxed by gamma >= 1."""
+
+    gamma: float = 1.2
+
+
+@dataclass(frozen=True)
+class MinEnergy(Policy):
+    """Algorithm 2 — run each candidate at its own f_max, minimize P x t.
+
+    §III-C: at fixed voltage, max frequency is energy-optimal (leakage
+    energy scales with time; dynamic energy does not) — so frequency is
+    derived, not searched.
+    """
+
+    metric: str = "energy"
+    nominal_fallback: bool = False
+
+    def frequency(self, sub, d, env):
+        f = sub.f_nom * sub.d_worst / d
+        return jnp.minimum(f, sub.f_cap)
+
+    def feasible(self, sub, d, env):
+        return jnp.ones_like(d, dtype=bool)  # delay is the clock, not a bound
+
+    def objective(self, sub, d, p, f, env):
+        return p * sub.exec_time(f)
+
+
+def from_spec(spec) -> Policy:
+    """Parse the CLI/runtime policy spec: 'power_save' | 'min_energy' |
+    'overscale:<gamma>' — or pass a Policy instance through unchanged."""
+    if isinstance(spec, Policy):
+        return spec
+    if spec == "power_save":
+        return PowerSave()
+    if spec == "min_energy":
+        return MinEnergy()
+    if spec.startswith("overscale:"):
+        try:
+            gamma = float(spec.split(":", 1)[1])
+        except ValueError:
+            raise ValueError(
+                f"overscale spec needs a numeric gamma, e.g. "
+                f"'overscale:1.2'; got {spec!r}") from None
+        return Overscale(gamma=gamma)
+    raise ValueError(f"unknown energy policy spec: {spec!r}")

@@ -1,0 +1,232 @@
+"""The shared fixed-point Solver (search -> thermal solve -> repeat).
+
+One engine runs every flow in the repo: Algorithm 1 (PowerSave), Algorithm 2
+(MinEnergy), §III-D over-scaling (Overscale), and the TPU fleet runtime —
+specialization lives entirely in the :class:`Policy` and the
+:class:`Substrate`.
+
+The loop is a single ``lax.while_loop`` — no Python iteration anywhere:
+
+    d      = substrate.cand_delay(T)            # (domains, candidates)
+    f      = policy.frequency(d)                #   "
+    p      = substrate.cand_power(T, f)         #   "
+    idx    = argmin over feasible candidates    # (domains,)
+    T_new  = thermal.solve(site_power(idx))     # (sites,)
+    done   = ||T_new - T||_inf < delta_t
+
+``d_worst`` (the STA / step contract) is computed once by the substrate and
+closed over as a constant.  ``solve_batch`` vmaps the whole fixed point over
+an environment batch (ambient temperatures, activities, gamma budgets), so a
+dynamic-scheme LUT or a gamma sweep is ONE compiled device call instead of N
+sequential ``run()``s.  Converged batch elements freeze (their state is
+re-selected) so batched results equal the sequential ones exactly.
+
+Per-iteration history (chosen candidate, total power, mean junction
+temperature) is recorded into fixed ``max_iters`` slots for the legacy trace
+dataclasses.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import thermal
+from repro.policy.policies import Policy
+from repro.policy.substrate import Env, Substrate
+
+
+class Solution(NamedTuple):
+    """Converged operating point; all leaves gain a leading batch axis
+    under :meth:`Solver.solve_batch`."""
+
+    idx: jnp.ndarray        # (D,)  chosen candidate per domain
+    f: jnp.ndarray          # (D,)  chosen clock at the last search
+    power: jnp.ndarray      # (D,)  domain power at the last search T
+    obj: jnp.ndarray        # (D,)  objective value at the last search
+    T: jnp.ndarray          # (S,)  converged temperature field
+    n_iters: jnp.ndarray    # ()    fixed-point iterations performed
+    converged: jnp.ndarray  # ()    bool
+    d_final: jnp.ndarray    # (D,)  delay of the choice at the converged T
+    f_final: jnp.ndarray    # (D,)  clock of the choice at the converged T
+    p_final: jnp.ndarray    # (D,)  domain power of the choice at converged T
+    idx_hist: jnp.ndarray   # (I, D) per-iteration choices
+    p_hist: jnp.ndarray     # (I,)  per-iteration total power
+    tj_hist: jnp.ndarray    # (I,)  per-iteration mean junction temperature
+
+
+class _State(NamedTuple):
+    T: jnp.ndarray
+    it: jnp.ndarray
+    idx: jnp.ndarray
+    f_sel: jnp.ndarray
+    p_sel: jnp.ndarray
+    obj_sel: jnp.ndarray
+    done: jnp.ndarray
+    idx_hist: jnp.ndarray
+    p_hist: jnp.ndarray
+    tj_hist: jnp.ndarray
+
+
+class Solver:
+    """Jitted fixed point of (policy, substrate); reusable across calls.
+
+    ``refine_window`` (volts) enables the paper's O(1) refinement: after the
+    first iteration the search is masked to a +-window neighbourhood of the
+    previous solution.  The nominal fallback ignores the window, exactly as
+    the legacy boundary search fell back to nominal rails.
+    """
+
+    def __init__(self, substrate: Substrate, policy: Policy,
+                 delta_t: float = 0.1, max_iters: int = 10,
+                 refine_window: Optional[float] = None):
+        if max_iters < 1:  # guard: a zero-iteration loop has no solution
+            max_iters = 1
+        self.substrate = substrate
+        self.policy = policy
+        substrate.d_worst  # force the cached STA eagerly, outside any trace
+        self.delta_t = float(delta_t)
+        self.max_iters = int(max_iters)
+        self.refine_window = refine_window
+        self._jit_solve = jax.jit(self._fixed_point)
+        self._jit_batch = jax.jit(jax.vmap(self._fixed_point,
+                                           in_axes=(0, 0)))
+
+    # ------------------------------------------------------------------
+    def _select(self, T, it, idx_prev, env):
+        """One grid search at temperature field T -> (idx, f, p, obj)."""
+        sub, pol = self.substrate, self.policy
+        d = sub.cand_delay(T, env)                      # (D, C)
+        f = pol.frequency(sub, d, env)                  # (D, C)
+        p = sub.cand_power(T, f, env)                   # (D, C)
+        feas = pol.feasible(sub, d, env)                # (D, C)
+        if self.refine_window is not None:
+            wmask = sub.window_mask(idx_prev, self.refine_window)
+            feas = feas & (wmask | (it == 0))
+        obj = pol.objective(sub, d, p, f, env)
+        obj_m = jnp.where(feas, obj, jnp.inf)
+        idx = jnp.argmin(obj_m, axis=-1)                # (D,)
+        if pol.nominal_fallback:
+            ok = jnp.any(feas, axis=-1)
+            idx = jnp.where(ok, idx, sub.nominal_idx)
+        take = lambda a: jnp.take_along_axis(a, idx[:, None], -1)[:, 0]
+        return idx, take(f), take(p), take(obj)
+
+    def _fixed_point(self, env: Env, T0) -> Solution:
+        sub = self.substrate
+        m, n = sub.grid
+        I, D = self.max_iters, sub.n_domains
+
+        def body(st: _State) -> _State:
+            idx, f_sel, p_sel, obj_sel = self._select(st.T, st.it, st.idx,
+                                                      env)
+            sp = sub.site_power(st.T, idx, f_sel, env)
+            T_new = thermal.solve(sp, m, n, env["t_amb"], sub.thermal_cfg)
+            dT = jnp.max(jnp.abs(T_new - st.T))
+            new = _State(
+                T=T_new, it=st.it + 1, idx=idx, f_sel=f_sel, p_sel=p_sel,
+                obj_sel=obj_sel, done=dT < self.delta_t,
+                idx_hist=st.idx_hist.at[st.it].set(idx),
+                p_hist=st.p_hist.at[st.it].set(jnp.sum(p_sel)),
+                tj_hist=st.tj_hist.at[st.it].set(jnp.mean(T_new)),
+            )
+            # under vmap the loop runs until ALL batch elements converge;
+            # freezing finished elements keeps batched == sequential
+            return jax.tree_util.tree_map(
+                lambda old, upd: jnp.where(st.done, old, upd), st, new)
+
+        def cond(st: _State):
+            return (~st.done) & (st.it < I)
+
+        st0 = _State(
+            T=jnp.asarray(T0, jnp.float32),
+            it=jnp.int32(0),
+            idx=jnp.full((D,), sub.nominal_idx, jnp.int32),
+            f_sel=jnp.zeros((D,), jnp.float32),
+            p_sel=jnp.zeros((D,), jnp.float32),
+            obj_sel=jnp.zeros((D,), jnp.float32),
+            done=jnp.bool_(False),
+            idx_hist=jnp.zeros((I, D), jnp.int32),
+            p_hist=jnp.zeros((I,), jnp.float32),
+            tj_hist=jnp.zeros((I,), jnp.float32),
+        )
+        st = jax.lax.while_loop(cond, body, st0)
+
+        # re-evaluate the final choice at the converged temperature field
+        # (the legacy flows report baseline power / Algorithm-2 delay there)
+        d_fin = sub.delay_at(st.T, st.idx, env)
+        f_fin = self.policy.frequency(sub, d_fin, env)
+        p_fin = sub.power_at(st.T, st.idx, f_fin, env)
+
+        return Solution(
+            idx=st.idx, f=st.f_sel, power=st.p_sel, obj=st.obj_sel, T=st.T,
+            n_iters=st.it, converged=st.done,
+            d_final=d_fin, f_final=f_fin, p_final=p_fin,
+            idx_hist=st.idx_hist, p_hist=st.p_hist, tj_hist=st.tj_hist,
+        )
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _env_arrays(env: Dict[str, Any]) -> Env:
+        return {k: jnp.asarray(v, jnp.float32) for k, v in env.items()}
+
+    def solve(self, env: Dict[str, Any], T0=None) -> Solution:
+        """Run the fixed point for one environment (concrete result)."""
+        env = self._env_arrays(env)
+        if T0 is None:
+            T0 = self.substrate.T0(env)
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_get(x), self._jit_solve(env, T0))
+
+    def solve_batch(self, envs: Dict[str, Any], T0=None) -> Solution:
+        """vmap the fixed point over the leading axis of every env leaf.
+
+        One compiled call evaluates the whole batch — this is the dynamic
+        scheme's LUT build and the gamma sweep of §III-D.
+        """
+        envs = self._env_arrays(envs)
+        B = int(next(iter(envs.values())).shape[0])
+        for k, v in envs.items():
+            if v.shape[:1] != (B,):
+                raise ValueError(
+                    f"env leaf {k!r} must lead with the batch axis {B}, "
+                    f"got shape {v.shape}")
+        if T0 is None:
+            T0 = jnp.stack([
+                self.substrate.T0(
+                    jax.tree_util.tree_map(lambda x: x[b], envs))
+                for b in range(B)])
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_get(x), self._jit_batch(envs, T0))
+
+
+# =============================================================================
+# solver cache — repeated wrapper calls reuse compiled fixed points
+# =============================================================================
+
+_CACHE_LIMIT = 32  # LRU bound: sweeps over generated netlists must not
+_SOLVER_CACHE: "OrderedDict" = OrderedDict()  # pin jits for process lifetime
+
+
+def cached_solver(substrate: Substrate, policy: Policy,
+                  delta_t: float = 0.1, max_iters: int = 10,
+                  refine_window: Optional[float] = None) -> Solver:
+    """Memoize Solver instances (and so their jit caches) by configuration.
+
+    Substrates are compared by identity — pair with the memoized substrate
+    constructors in ``repro.policy.substrate``.  Policies are frozen
+    dataclasses and compare by value.  Entries hold the substrate (via the
+    Solver), so an id key can never alias a collected substrate.
+    """
+    key = (id(substrate), policy, float(delta_t), int(max_iters),
+           refine_window)
+    if key in _SOLVER_CACHE:
+        _SOLVER_CACHE.move_to_end(key)
+        return _SOLVER_CACHE[key]
+    solver = _SOLVER_CACHE[key] = Solver(substrate, policy, delta_t,
+                                         max_iters, refine_window)
+    if len(_SOLVER_CACHE) > _CACHE_LIMIT:
+        _SOLVER_CACHE.popitem(last=False)
+    return solver

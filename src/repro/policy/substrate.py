@@ -1,0 +1,332 @@
+"""Substrate protocol — the device a thermal-aware policy optimizes.
+
+A :class:`Substrate` is everything Algorithm 1/2 need to know about a piece
+of silicon (DESIGN.md §2):
+
+- a *site grid* ``(m, n)`` the thermal solver runs on (FPGA tiles / pod
+  chips) with a :class:`~repro.core.thermal.ThermalConfig`,
+- one or more *selection domains* ``D`` that each pick a candidate operating
+  point independently (the whole die for an FPGA — one shared rail pair —
+  and every chip of a TPU pod),
+- a flat *candidate grid* of ``C`` operating points (the (V_core, V_bram) /
+  (v_core, v_sram) mesh) with the nominal point at ``nominal_idx``,
+- traceable physics: per-candidate delay at a temperature field
+  (``cand_delay``), per-candidate domain power (``cand_power``), and the
+  per-site power map of a chosen selection (``site_power``) that feeds the
+  thermal solve,
+- the timing reference ``d_worst`` (STA at T_MAX and nominal rails for the
+  FPGA; the relative step-time contract ``1.0`` for the TPU pod), computed
+  once and cached.
+
+Two implementations live here: :class:`FpgaNetlistSubstrate` wraps
+``core/netlist.py`` (the paper's placed-and-routed designs) and
+:class:`TpuFleetSubstrate` wraps ``core/tpu_fleet.py`` (the pod
+re-parameterization).  Policies and the Solver never import either module —
+they only see this protocol, which is what lets one fixed-point engine serve
+Algorithm 1, Algorithm 2, over-scaling, and the fleet runtime.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import characterization as C
+from repro.core import netlist as NL
+from repro.core import thermal
+from repro.core import tpu_fleet as TF
+from repro.core.netlist import Netlist
+
+# degC guard on timing eval (TSD error / spatial gradients, paper §III-B)
+T_GUARD = 2.0
+
+# the paper's Algorithm-1 voltage mesh (10 mV steps)
+V_CORE_GRID = np.round(np.arange(0.55, 0.801, 0.01), 3)
+V_BRAM_GRID = np.round(np.arange(0.55, 0.951, 0.01), 3)
+
+Env = Dict[str, jnp.ndarray]
+
+
+@runtime_checkable
+class Substrate(Protocol):
+    """Structural protocol; see the module docstring for the contract."""
+
+    grid: Tuple[int, int]
+    thermal_cfg: thermal.ThermalConfig
+    n_domains: int
+    n_candidates: int
+    nominal_idx: int
+    f_nom: float        # frequency held by constraint policies (GHz or rel)
+    f_cap: float        # upper clock bound for frequency-scaling policies
+
+    @property
+    def d_worst(self) -> float: ...
+
+    def T0(self, env: Env) -> jnp.ndarray: ...
+    def cand_delay(self, T_sites, env: Env) -> jnp.ndarray: ...
+    def cand_power(self, T_sites, f, env: Env) -> jnp.ndarray: ...
+    def site_power(self, T_sites, idx, f_sel, env: Env) -> jnp.ndarray: ...
+    def delay_at(self, T_sites, idx, env: Env) -> jnp.ndarray: ...
+    def power_at(self, T_sites, idx, f_sel, env: Env) -> jnp.ndarray: ...
+    def window_mask(self, idx_prev, window: float) -> jnp.ndarray: ...
+    def exec_time(self, f) -> jnp.ndarray: ...
+    def nominal_only(self) -> "Substrate": ...
+
+
+# =============================================================================
+# FPGA netlist substrate (Algorithm 1/2 on the paper's designs)
+# =============================================================================
+
+class FpgaNetlistSubstrate:
+    """One placed-and-routed design; a single (V_core, V_bram) domain.
+
+    ``env`` keys: ``t_amb`` (ambient degC), ``act`` (primary-input activity).
+    Delay is evaluated at ``T + T_GUARD`` (paper §III-B guard), power at T.
+    """
+
+    def __init__(self, netlist: Netlist,
+                 lib: Optional[C.DeviceLibrary] = None,
+                 tc: thermal.ThermalConfig = thermal.ThermalConfig(),
+                 v_core_grid=None, v_bram_grid=None,
+                 _d_worst: Optional[float] = None):
+        self.netlist = netlist
+        self.lib = lib or C.default_library()
+        self.thermal_cfg = tc
+        self.grid = (netlist.m, netlist.n)
+        self.nlj = netlist.as_jax()
+        vc = np.asarray(V_CORE_GRID if v_core_grid is None else v_core_grid,
+                        np.float32)
+        vb = np.asarray(V_BRAM_GRID if v_bram_grid is None else v_bram_grid,
+                        np.float32)
+        VC, VB = np.meshgrid(vc, vb, indexing="ij")
+        self.vc_flat = jnp.asarray(VC.reshape(-1))
+        self.vb_flat = jnp.asarray(VB.reshape(-1))
+        self.n_domains = 1
+        self.n_candidates = int(self.vc_flat.shape[0])
+        nom = (np.abs(VC.reshape(-1) - C.V_CORE_NOM)
+               + np.abs(VB.reshape(-1) - C.V_BRAM_NOM))
+        self.nominal_idx = int(np.argmin(nom))
+        self._d_worst = _d_worst
+        self.f_cap = np.inf  # Algorithm 2 may overclock past f_base
+
+    @property
+    def d_worst(self) -> float:
+        """STA at (T_MAX, nominal rails) [ns] — the guardbanded clock."""
+        if self._d_worst is None:
+            n_tiles = self.netlist.n_tiles
+            self._d_worst = float(NL.crit_delay(
+                self.lib, self.nlj, jnp.full((n_tiles,), C.T_MAX),
+                C.V_CORE_NOM, C.V_BRAM_NOM))
+        return self._d_worst
+
+    @property
+    def f_nom(self) -> float:
+        return 1.0 / self.d_worst  # GHz; the clock stays at d_worst
+
+    def T0(self, env: Env) -> jnp.ndarray:
+        return jnp.full((self.netlist.n_tiles,),
+                        jnp.asarray(env["t_amb"], jnp.float32))
+
+    def cand_delay(self, T_sites, env: Env) -> jnp.ndarray:
+        d = jax.vmap(lambda vc, vb: NL.crit_delay(
+            self.lib, self.nlj, T_sites + T_GUARD, vc, vb))(
+                self.vc_flat, self.vb_flat)
+        return d[None, :]  # (1, C)
+
+    def cand_power(self, T_sites, f, env: Env) -> jnp.ndarray:
+        act = env["act"]
+
+        def total(vc, vb, f_ghz):
+            lkg, dyn = NL.tile_power(self.lib, self.nlj, T_sites, vc, vb,
+                                     f_ghz, act)
+            return jnp.sum(lkg) + jnp.sum(dyn)
+
+        f_c = jnp.broadcast_to(f, (1, self.n_candidates))[0]
+        return jax.vmap(total)(self.vc_flat, self.vb_flat, f_c)[None, :]
+
+    def site_power(self, T_sites, idx, f_sel, env: Env) -> jnp.ndarray:
+        vc, vb = self.vc_flat[idx[0]], self.vb_flat[idx[0]]
+        lkg, dyn = NL.tile_power(self.lib, self.nlj, T_sites, vc, vb,
+                                 f_sel[0], env["act"])
+        return lkg + dyn  # (n_tiles,) [mW]
+
+    def delay_at(self, T_sites, idx, env: Env) -> jnp.ndarray:
+        d = NL.crit_delay(self.lib, self.nlj, T_sites + T_GUARD,
+                          self.vc_flat[idx[0]], self.vb_flat[idx[0]])
+        return d[None]
+
+    def power_at(self, T_sites, idx, f_sel, env: Env) -> jnp.ndarray:
+        return jnp.sum(self.site_power(T_sites, idx, f_sel, env))[None]
+
+    def window_mask(self, idx_prev, window: float) -> jnp.ndarray:
+        """Paper's O(1) refinement: candidates within ±window V of the
+        previous solution on both rails."""
+        vc_p, vb_p = self.vc_flat[idx_prev[0]], self.vb_flat[idx_prev[0]]
+        m = ((jnp.abs(self.vc_flat - vc_p) <= window)
+             & (jnp.abs(self.vb_flat - vb_p) <= window))
+        return m[None, :]
+
+    def exec_time(self, f) -> jnp.ndarray:
+        return 1.0 / f  # one clock period [ns]
+
+    def nominal_only(self) -> "FpgaNetlistSubstrate":
+        if getattr(self, "_nominal", None) is None:
+            self._nominal = FpgaNetlistSubstrate(
+                self.netlist, self.lib, self.thermal_cfg,
+                v_core_grid=[C.V_CORE_NOM], v_bram_grid=[C.V_BRAM_NOM],
+                _d_worst=self.d_worst)
+        return self._nominal
+
+    def decode(self, idx) -> Tuple[np.ndarray, np.ndarray]:
+        """Candidate index -> (v_core, v_bram) as numpy."""
+        return (np.asarray(self.vc_flat)[np.asarray(idx)],
+                np.asarray(self.vb_flat)[np.asarray(idx)])
+
+
+# =============================================================================
+# TPU fleet substrate (the pod re-parameterization, DESIGN.md §2)
+# =============================================================================
+
+class TpuFleetSubstrate:
+    """A (m x n)-chip pod; every chip is its own selection domain.
+
+    ``env`` keys: ``t_amb``, ``util`` (per-chip utilization scale, (D,)).
+    ``d_worst`` is the *relative* step-time contract 1.0: a candidate is
+    feasible when its worst pipeline delay factor stays within gamma of it.
+    """
+
+    def __init__(self, prof: TF.StepProfile,
+                 lib: Optional[TF.TpuLibrary] = None,
+                 grid: Tuple[int, int] = (16, 16),
+                 theta_chip: float = 0.20,
+                 tc: Optional[thermal.ThermalConfig] = None,
+                 v_core_grid=None, v_sram_grid=None,
+                 warm_offset: float = 25.0):
+        self.prof = prof
+        self.lib = lib or TF.TpuLibrary()
+        self.grid = grid
+        self.thermal_cfg = tc or TF.pod_thermal_config(theta_chip,
+                                                       grid[0] * grid[1])
+        vc = np.asarray(
+            np.arange(0.55, TF.V_CORE_NOM + 0.001, 0.01)
+            if v_core_grid is None else v_core_grid, np.float32)
+        vs = np.asarray(
+            np.arange(0.60, TF.V_SRAM_NOM + 0.001, 0.01)
+            if v_sram_grid is None else v_sram_grid, np.float32)
+        VC, VS = np.meshgrid(vc, vs, indexing="ij")
+        self.vc_flat = jnp.asarray(VC.reshape(-1))
+        self.vs_flat = jnp.asarray(VS.reshape(-1))
+        self.n_domains = grid[0] * grid[1]
+        self.n_candidates = int(self.vc_flat.shape[0])
+        nom = (np.abs(VC.reshape(-1) - TF.V_CORE_NOM)
+               + np.abs(VS.reshape(-1) - TF.V_SRAM_NOM))
+        self.nominal_idx = int(np.argmin(nom))
+        self.warm_offset = warm_offset
+        self.f_nom = 1.0
+        self.f_cap = 1.0  # the pod never overclocks past the rated step
+
+    @property
+    def d_worst(self) -> float:
+        return 1.0  # the step-time contract, in relative units
+
+    def T0(self, env: Env) -> jnp.ndarray:
+        return jnp.full((self.n_domains,),
+                        jnp.asarray(env["t_amb"], jnp.float32)
+                        + self.warm_offset)
+
+    def cand_delay(self, T_sites, env: Env) -> jnp.ndarray:
+        """Worst relative pipeline delay 1/f_max per (chip, candidate)."""
+        Tg = T_sites[:, None] + T_GUARD
+        fmax = TF.f_max_rel(self.lib, self.vc_flat[None, :],
+                            self.vs_flat[None, :], Tg)
+        return 1.0 / fmax  # (D, C)
+
+    def cand_power(self, T_sites, f, env: Env) -> jnp.ndarray:
+        p = TF.chip_power(self.lib, self.prof, self.vc_flat[None, :],
+                          self.vs_flat[None, :], f, T_sites[:, None])
+        return p * env["util"][:, None]  # (D, C) [W]
+
+    def site_power(self, T_sites, idx, f_sel, env: Env) -> jnp.ndarray:
+        p = TF.chip_power(self.lib, self.prof, self.vc_flat[idx],
+                          self.vs_flat[idx], f_sel, T_sites)
+        return p * env["util"] * 1e3  # (D,) [mW] for the thermal solver
+
+    def delay_at(self, T_sites, idx, env: Env) -> jnp.ndarray:
+        fmax = TF.f_max_rel(self.lib, self.vc_flat[idx], self.vs_flat[idx],
+                            T_sites + T_GUARD)
+        return 1.0 / fmax
+
+    def power_at(self, T_sites, idx, f_sel, env: Env) -> jnp.ndarray:
+        p = TF.chip_power(self.lib, self.prof, self.vc_flat[idx],
+                          self.vs_flat[idx], f_sel, T_sites)
+        return p * env["util"]
+
+    def window_mask(self, idx_prev, window: float) -> jnp.ndarray:
+        vc_p = self.vc_flat[idx_prev][:, None]
+        vs_p = self.vs_flat[idx_prev][:, None]
+        return ((jnp.abs(self.vc_flat[None, :] - vc_p) <= window)
+                & (jnp.abs(self.vs_flat[None, :] - vs_p) <= window))
+
+    def exec_time(self, f) -> jnp.ndarray:
+        """Relative step time when the core clock runs at f x nominal."""
+        scal = self.prof.f_scalable
+        return scal / f + (1.0 - scal)
+
+    def nominal_only(self) -> "TpuFleetSubstrate":
+        if getattr(self, "_nominal", None) is None:
+            self._nominal = TpuFleetSubstrate(
+                self.prof, self.lib, self.grid, tc=self.thermal_cfg,
+                v_core_grid=[TF.V_CORE_NOM], v_sram_grid=[TF.V_SRAM_NOM],
+                warm_offset=self.warm_offset)
+        return self._nominal
+
+    def decode(self, idx) -> Tuple[np.ndarray, np.ndarray]:
+        return (np.asarray(self.vc_flat)[np.asarray(idx)],
+                np.asarray(self.vs_flat)[np.asarray(idx)])
+
+
+# =============================================================================
+# substrate caches (stable jit keys for the Solver cache in solver.py)
+# =============================================================================
+
+_CACHE_LIMIT = 16  # LRU bound: a netlist sweep must not pin jits forever
+_FPGA_CACHE: "OrderedDict" = OrderedDict()
+_TPU_CACHE: "OrderedDict" = OrderedDict()
+
+
+def _lru_get(cache, key, make):
+    if key in cache:
+        cache.move_to_end(key)
+        return cache[key]
+    val = cache[key] = make()
+    if len(cache) > _CACHE_LIMIT:
+        cache.popitem(last=False)
+    return val
+
+
+def fpga_substrate(netlist: Netlist, lib=None,
+                   tc: thermal.ThermalConfig = thermal.ThermalConfig()
+                   ) -> FpgaNetlistSubstrate:
+    """Memoized substrate so repeated ``run()`` calls share compiled solvers.
+
+    Keyed by netlist identity (netlists are cached by vtr_benchmarks.load)
+    and by library/thermal *value* (both are frozen dataclasses); LRU-bounded
+    so ad-hoc ``NL.generate`` netlists don't pin memory for the process
+    lifetime.
+    """
+    lib = lib or C.default_library()
+    key = (id(netlist), lib, tc)
+    return _lru_get(_FPGA_CACHE, key,
+                    lambda: FpgaNetlistSubstrate(netlist, lib, tc))
+
+
+def tpu_substrate(prof: TF.StepProfile, lib=None,
+                  grid: Tuple[int, int] = (16, 16),
+                  theta_chip: float = 0.20) -> TpuFleetSubstrate:
+    lib = lib or TF.TpuLibrary()
+    key = (prof, lib, grid, theta_chip)
+    return _lru_get(_TPU_CACHE, key,
+                    lambda: TpuFleetSubstrate(prof, lib, grid, theta_chip))

@@ -1,0 +1,110 @@
+"""Minimal deterministic stand-in for `hypothesis` (see conftest.py).
+
+The container image may lack the real library; installing packages is not an
+option, and the property tests only use a small surface: ``@given`` with
+keyword strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``floats`` / ``sampled_from`` strategies.  This stub replays
+each property over a deterministic sample set (bounds first, then seeded
+uniforms) so the assertions still exercise a meaningful input range.
+
+If the real `hypothesis` is importable it is always preferred — conftest
+only installs this module into ``sys.modules`` on ImportError.
+"""
+from __future__ import annotations
+
+import random
+from types import ModuleType, SimpleNamespace
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_at(self, rng, i):
+        return self._draw(rng, i)
+
+
+def integers(min_value, max_value):
+    bounds = [min_value, max_value]
+
+    def draw(rng, i):
+        if i < len(bounds):
+            return bounds[i]
+        return rng.randint(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def floats(min_value, max_value, **_kw):
+    bounds = [min_value, max_value]
+
+    def draw(rng, i):
+        if i < len(bounds):
+            return bounds[i]
+        return rng.uniform(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def sampled_from(choices):
+    seq = list(choices)
+
+    def draw(rng, i):
+        if i < len(seq):
+            return seq[i]
+        return rng.choice(seq)
+
+    return _Strategy(draw)
+
+
+def lists(elem, min_size=0, max_size=10):
+    def draw(rng, i):
+        n = rng.randint(min_size, max_size)
+        return [elem.example_at(rng, rng.randint(0, 10**6)) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_stub_max_examples", None) or getattr(
+                fn, "_stub_max_examples", 20)
+            rng = random.Random(0)
+            for i in range(n):
+                drawn = {k: s.example_at(rng, i)
+                         for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # keep the wrapper signature opaque (no __wrapped__): pytest must
+        # not mistake the strategy kwargs for fixtures
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner._stub_given = True
+        return runner
+
+    return deco
+
+
+def install(sys_modules) -> None:
+    """Register this stub as the `hypothesis` package."""
+    mod = ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = SimpleNamespace(all=lambda: [])
+    st = ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.sampled_from = sampled_from
+    st.lists = lists
+    mod.strategies = st
+    sys_modules["hypothesis"] = mod
+    sys_modules["hypothesis.strategies"] = st

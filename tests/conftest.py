@@ -5,6 +5,14 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
 
+try:  # property tests prefer real hypothesis; fall back to the local stub
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install(sys.modules)
+
 import jax
 import pytest
 

@@ -1,0 +1,203 @@
+"""repro.policy — the unified Substrate/Policy/Solver stack.
+
+Equivalence contract: the legacy entry points (voltage_scaling.run,
+energy_opt.run, overscaling.run, EnergyAwareRuntime.plan) are thin wrappers
+over the shared Solver and must reproduce their pre-refactor results.  The
+GOLDEN_* constants below were captured from the seed implementation (Python
+fixed-point loops) before the migration; everything is pinned to 1e-3.
+"""
+import numpy as np
+import pytest
+
+from repro import policy as pol
+from repro.core import (energy_opt as EO, netlist as NL, overscaling as OS,
+                        runtime as RT, thermal, tpu_fleet as TF,
+                        voltage_scaling as VS, vtr_benchmarks as vb)
+
+TC12 = thermal.ThermalConfig(theta_ja=12.0)
+TC2 = thermal.ThermalConfig(theta_ja=2.0)
+
+# pre-refactor (seed) results, captured on the legacy Python loops
+GOLDEN_VS = {"v_core": 0.74, "v_bram": 0.79, "power_mw": 8.458870,
+             "iters": 2}  # VS.run(mkPktMerge, 60C, act 1.0, theta 12)
+GOLDEN_EO = {"v_core": 0.55, "v_bram": 0.55, "d_opt_ns": 17.019848,
+             "energy": 27.992240, "saving": 0.640888,
+             "freq_ratio": 0.367218}  # EO.run(mkPktMerge, 65C, theta 2)
+GOLDEN_OS = {"v_core": 0.66, "v_bram": 0.70, "power_mw": 39.173454,
+             "saving": 0.454091,
+             "frac_violating": 0.542969}  # OS.run(raygentop, g=1.2, 40C)
+GOLDEN_TPU = {  # EnergyAwareRuntime(profile).plan() @ 25C, 16x16 pod
+    "power_save": {"pod_power_w": 50196.734, "saving": 0.114950,
+                   "step_s": 0.86, "t_max": 64.216},
+    "min_energy": {"pod_power_w": 12895.854, "saving": 0.534707,
+                   "step_s": 1.759880, "t_max": 35.075},
+    "overscale:1.2": {"pod_power_w": 33512.879, "saving": 0.409113,
+                      "step_s": 0.86, "t_max": 51.182},
+}
+
+
+@pytest.fixture(scope="module")
+def mkpkt():
+    return vb.load("mkPktMerge")
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                        collective_s=0.2)
+
+
+class TestPolicyEquivalence:
+    def test_power_save_matches_legacy(self, mkpkt):
+        r = VS.run(mkpkt, 60.0, 1.0, TC12)
+        assert r.v_core == pytest.approx(GOLDEN_VS["v_core"], abs=1e-3)
+        assert r.v_bram == pytest.approx(GOLDEN_VS["v_bram"], abs=1e-3)
+        assert r.power_mw == pytest.approx(GOLDEN_VS["power_mw"], rel=1e-3)
+        assert len(r.trace) == GOLDEN_VS["iters"]
+        # the raw policy API lands on the same operating point
+        sub = pol.fpga_substrate(mkpkt, tc=TC12)
+        solver = pol.cached_solver(sub, pol.PowerSave(), 0.1, 10,
+                                   refine_window=VS.REFINE_WINDOW_V)
+        sol = solver.solve({"t_amb": 60.0, "act": 1.0})
+        vc, vbr = sub.decode(sol.idx)
+        assert float(vc[0]) == pytest.approx(r.v_core, abs=1e-6)
+        assert float(vbr[0]) == pytest.approx(r.v_bram, abs=1e-6)
+        assert float(sol.power[0]) == pytest.approx(r.power_mw, rel=1e-6)
+
+    def test_min_energy_matches_legacy(self, mkpkt):
+        r = EO.run(mkpkt, 65.0, 1.0, TC2)
+        assert r.v_core == pytest.approx(GOLDEN_EO["v_core"], abs=1e-3)
+        assert r.v_bram == pytest.approx(GOLDEN_EO["v_bram"], abs=1e-3)
+        assert r.d_opt_ns == pytest.approx(GOLDEN_EO["d_opt_ns"], rel=1e-3)
+        assert r.energy == pytest.approx(GOLDEN_EO["energy"], rel=1e-3)
+        assert r.saving == pytest.approx(GOLDEN_EO["saving"], abs=1e-3)
+        assert r.freq_ratio == pytest.approx(GOLDEN_EO["freq_ratio"],
+                                             rel=1e-3)
+
+    def test_overscale_matches_legacy(self):
+        nl = NL.generate(vb.BY_NAME["raygentop"])
+        r = OS.run(nl, 1.2, t_amb=40.0, tc=TC12)
+        assert r.v_core == pytest.approx(GOLDEN_OS["v_core"], abs=1e-3)
+        assert r.v_bram == pytest.approx(GOLDEN_OS["v_bram"], abs=1e-3)
+        assert r.power_mw == pytest.approx(GOLDEN_OS["power_mw"], rel=1e-3)
+        assert r.saving == pytest.approx(GOLDEN_OS["saving"], abs=1e-3)
+        assert r.frac_violating == pytest.approx(
+            GOLDEN_OS["frac_violating"], abs=1e-3)
+
+    @pytest.mark.parametrize("spec", list(GOLDEN_TPU))
+    def test_tpu_policies_match_legacy(self, profile, spec):
+        g = GOLDEN_TPU[spec]
+        p = RT.EnergyAwareRuntime(profile, policy=spec).plan()
+        assert p.pod_power_w == pytest.approx(g["pod_power_w"], rel=1e-3)
+        assert p.saving == pytest.approx(g["saving"], abs=1e-3)
+        assert p.step_s == pytest.approx(g["step_s"], rel=1e-3)
+        assert p.t_max == pytest.approx(g["t_max"], abs=0.1)
+
+    def test_policy_object_equals_spec_string(self, profile):
+        a = RT.EnergyAwareRuntime(profile, policy="overscale:1.2").plan()
+        b = RT.EnergyAwareRuntime(profile,
+                                  policy=pol.Overscale(gamma=1.2)).plan()
+        assert a.pod_power_w == pytest.approx(b.pod_power_w, rel=1e-6)
+        np.testing.assert_array_equal(a.v_core, b.v_core)
+
+
+class TestSolveBatch:
+    def test_fpga_lut_batch_equals_sequential(self, mkpkt):
+        t_ambs = [10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0, 80.0]
+        lut = VS.dynamic_lut(mkpkt, t_ambs, tc=TC2)  # one batched call
+        sub = pol.fpga_substrate(mkpkt, tc=TC2)
+        solver = pol.cached_solver(sub, pol.PowerSave(), 0.1, 10,
+                                   refine_window=VS.REFINE_WINDOW_V)
+        for t in t_ambs:  # sequential fixed points, same solver
+            sol = solver.solve({"t_amb": t, "act": 1.0})
+            vc, vbr = sub.decode(sol.idx)
+            assert lut[t] == (pytest.approx(float(vc[0]), abs=1e-6),
+                              pytest.approx(float(vbr[0]), abs=1e-6))
+
+    def test_tpu_lut_batch_equals_sequential(self, profile):
+        t_ambs = [15.0, 25.0, 35.0, 45.0]
+        rt = RT.EnergyAwareRuntime(profile, policy="power_save")
+        lut = rt.dynamic_lut(t_ambs)  # one batched call
+        for t in t_ambs:  # a fresh runtime per ambient = the legacy sweep
+            p = RT.EnergyAwareRuntime(profile, policy="power_save",
+                                      t_amb=t).plan()
+            assert lut[t][0] == pytest.approx(float(np.median(p.v_core)),
+                                              abs=1e-6)
+            assert lut[t][1] == pytest.approx(float(np.median(p.v_sram)),
+                                              abs=1e-6)
+
+    def test_gamma_sweep_batch_equals_sequential(self):
+        nl = NL.generate(vb.BY_NAME["raygentop"])
+        gammas = [1.0, 1.2, 1.4]
+        batched = OS.sweep(nl, gammas, t_amb=40.0, tc=TC12)
+        for g, r in zip(gammas, batched):
+            single = OS.run(nl, g, t_amb=40.0, tc=TC12)
+            assert r.v_core == pytest.approx(single.v_core, abs=1e-6)
+            assert r.v_bram == pytest.approx(single.v_bram, abs=1e-6)
+            assert r.power_mw == pytest.approx(single.power_mw, rel=1e-6)
+
+    def test_dynamic_lut_does_not_corrupt_state(self, profile):
+        """Regression: the legacy sweep left self.T at the last ambient's
+        estimate, corrupting subsequent plan() calls."""
+        rt = RT.EnergyAwareRuntime(profile, policy="power_save")
+        control = RT.EnergyAwareRuntime(profile, policy="power_save")
+        rt.plan()
+        control.plan()
+        T_after_plan = np.asarray(rt.T).copy()
+        rt.dynamic_lut([15.0, 30.0, 45.0, 60.0])
+        np.testing.assert_array_equal(np.asarray(rt.T), T_after_plan)
+        assert rt.t_amb == 25.0
+        # a plan after the sweep must equal one on an untouched runtime
+        after, ref = rt.plan(), control.plan()
+        assert after.pod_power_w == pytest.approx(ref.pod_power_w, rel=1e-6)
+        np.testing.assert_array_equal(after.v_core, ref.v_core)
+
+
+class TestGuards:
+    def test_vs_zero_iters_no_crash(self, mkpkt):
+        # legacy: IndexError on trace[-1] / UnboundLocalError on vc_prev
+        r = VS.run(mkpkt, 60.0, 1.0, TC12, max_iters=0)
+        assert len(r.trace) == 1  # clamped to one iteration
+        assert r.power_mw > 0
+
+    def test_eo_zero_iters_no_crash(self, mkpkt):
+        # legacy: ZeroDivisionError on best.d_opt_ns == 0
+        r = EO.run(mkpkt, 65.0, 1.0, TC2, max_iters=0)
+        assert r.d_opt_ns > 0
+        assert np.isfinite(r.freq_ratio)
+
+    def test_safe_div_guards_degenerate(self):
+        assert EO._safe_div(1.0, 0.0) == 0.0
+        assert EO._safe_div(1.0, 0.0, default=1.0) == 1.0
+        assert EO._safe_div(6.0, 3.0) == 2.0
+
+    def test_from_spec(self):
+        assert isinstance(pol.from_spec("power_save"), pol.PowerSave)
+        assert isinstance(pol.from_spec("min_energy"), pol.MinEnergy)
+        ov = pol.from_spec("overscale:1.35")
+        assert isinstance(ov, pol.Overscale)
+        assert ov.gamma == pytest.approx(1.35)
+        assert pol.from_spec(ov) is ov
+        with pytest.raises(ValueError):
+            pol.from_spec("warp_speed")
+
+    def test_solver_clamps_max_iters(self, mkpkt):
+        sub = pol.fpga_substrate(mkpkt, tc=TC12)
+        s = pol.Solver(sub, pol.PowerSave(), max_iters=0)
+        assert s.max_iters == 1
+
+
+class TestSubstrateProtocol:
+    def test_both_implementations_satisfy_protocol(self, mkpkt, profile):
+        fpga = pol.fpga_substrate(mkpkt, tc=TC12)
+        tpu = pol.tpu_substrate(profile)
+        for sub in (fpga, tpu):
+            assert isinstance(sub, pol.Substrate)
+            assert sub.n_candidates > 0
+            assert 0 <= sub.nominal_idx < sub.n_candidates
+            assert sub.d_worst > 0
+
+    def test_fpga_d_worst_cached_and_shared(self, mkpkt):
+        sub = pol.fpga_substrate(mkpkt, tc=TC12)
+        assert sub.nominal_only().d_worst == sub.d_worst
+        assert pol.fpga_substrate(mkpkt, tc=TC12) is sub  # memoized
