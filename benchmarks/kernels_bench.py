@@ -1,7 +1,12 @@
 """Kernel microbenchmarks (interpret-mode wall times are STRUCTURAL only —
 the CPU interpreter executes the kernel body; TPU perf comes from the
 roofline, not these numbers). Also times each kernel's jnp reference, which
-IS meaningful on CPU."""
+IS meaningful on CPU.
+
+``--smoke`` additionally runs the closed-loop serving tick benchmark
+(repro.control): engine tokens/s, LUT-fast-path control tick latency, and
+full-solver replan latency. ``--json PATH`` dumps every number for the CI
+artifact."""
 from __future__ import annotations
 
 import time
@@ -82,9 +87,73 @@ def run(quick: bool = False) -> Dict:
     return out
 
 
+def closed_loop(quick: bool = True) -> Dict:
+    """Closed-loop serving tick benchmark (DESIGN.md §3).
+
+    Measures the three latencies that matter for the control plane under
+    load: serve-engine token throughput, the LutController fast-path tick
+    (interpolated lookup + actuation + thermal settle), and a full-solver
+    replan (warm jit)."""
+    import jax
+    import numpy as np
+
+    from repro import control as ctl
+    from repro.configs import registry
+    from repro.core import runtime as RT
+    from repro.core import tpu_fleet as TF
+    from repro.models.model import Model
+    from repro.serve.engine import Engine, Request
+
+    out = {}
+
+    # -- serving throughput under continuous batching ------------------------
+    cfg = registry.get("llama3.2-1b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, batch_slots=4, max_len=64)
+    n_req = 6 if quick else 16
+    for rid in range(n_req):
+        eng.submit(Request(rid, np.arange(4 + rid % 3) % cfg.vocab_size,
+                           max_new=8))
+    eng.step()  # pay prefill/decode compile outside the timed region
+    t0 = time.time()
+    eng.run()
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in eng.finished)
+    out["serve_tokens_per_s"] = toks / dt
+
+    # -- control-plane latencies --------------------------------------------
+    prof = TF.StepProfile.from_roofline(compute_s=0.7, memory_s=0.4,
+                                        collective_s=0.15)
+    rt = RT.EnergyAwareRuntime(prof, policy="power_save")
+    t0 = time.time()
+    controller = rt.controller(sweep=(15.0, 40.0, 6), guard_band_c=3.0)
+    out["lut_build_s"] = time.time() - t0  # one solve_batch over the sweep
+    amb = ctl.AmbientSensor(25.0)
+    fleet = ctl.FleetActuator.from_runtime(rt)
+    loop = ctl.ControlLoop(ctl.TelemetryBus([amb, fleet]), controller,
+                           [fleet])
+    loop.step(now=0.0)  # cold start: solver replan + jit compile
+
+    amb.trace = 35.0  # beyond the guard band -> warm full-solver replan
+    t0 = time.perf_counter()
+    loop.step(now=1.0)
+    out["replan_latency_ms"] = (time.perf_counter() - t0) * 1e3
+
+    iters = 5
+    t0 = time.perf_counter()
+    for k in range(iters):  # quasi-static drift stays on the LUT fast path
+        amb.trace = 35.0 + 0.1 * (k + 1)
+        loop.step(now=2.0 + k)
+    out["ctl_tick_ms"] = (time.perf_counter() - t0) / iters * 1e3
+    assert controller.stats.replans == 2 and controller.stats.lut_hits == iters
+    return out
+
+
 def main(argv=None) -> None:
     """CI smoke entry: ``python benchmarks/kernels_bench.py --smoke``."""
     import argparse
+    import json
     import os
     import sys
 
@@ -92,10 +161,18 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced shapes; assert every kernel runs")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump results as JSON (the CI artifact)")
     args = ap.parse_args(argv)
     res = run(quick=args.smoke)
+    if args.smoke:
+        res.update(closed_loop(quick=True))
     for k, v in res.items():
-        print(f"{k},{v:.0f}")
+        print(f"{k},{v:.3f}" if v < 100 else f"{k},{v:.0f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(f"[json] wrote {args.json}")
     assert all(v > 0 for v in res.values())
 
 

@@ -1,0 +1,55 @@
+"""repro.control — the telemetry -> controller -> actuator control plane.
+
+The paper's §III-B dynamic scheme is an *online* controller: sense ambient,
+answer from the precomputed LUT, fall back to the full Algorithm-1 fixed
+point only when the fast path can't be trusted.  This package is that loop,
+grown production-shaped (DESIGN.md §3):
+
+    sensors ──> TelemetryBus ──> Snapshot ──> Controller ──> Actions
+       ^                                          │
+       └── FleetActuator.settle (thermal) <───────┘──> EngineActuator
+
+    from repro import control as ctl
+
+    rt = EnergyAwareRuntime(prof, policy="power_save")
+    controller = ctl.LutController(rt.planner, sweep=(10.0, 45.0, 8))
+    fleet = ctl.FleetActuator.from_runtime(rt)
+    loop = ctl.ControlLoop(
+        ctl.TelemetryBus([ctl.AmbientSensor(trace), fleet]),
+        controller, [fleet])
+    report = loop.step(now)
+
+``EnergyAwareRuntime`` (core/runtime.py) is a thin composition over
+:class:`FleetPlanner`; its ``plan()``/``dynamic_lut()`` wrappers keep the
+pre-refactor golden numbers (tests/test_policy_api.py).
+"""
+from repro.control.actuator import (Actuator, EngineActuator, FleetActuator,
+                                    FleetReadout)
+from repro.control.controller import (Action, BoostRail, Controller,
+                                      ControllerStats, LutController,
+                                      Rebalance, SetRails, Throttle)
+from repro.control.loop import ControlLoop, LoopReport
+from repro.control.lut import DynamicLut, sweep_points
+from repro.control.planner import FleetPlanner, PlanOut
+from repro.control.telemetry import (AmbientSample, AmbientSensor,
+                                     ChipTempSample, EngineTelemetry,
+                                     HeartbeatSample, MonitorTelemetry,
+                                     Snapshot, StepSample, StragglerSample,
+                                     TelemetryBus, TelemetrySource,
+                                     TickSample)
+
+__all__ = [
+    # telemetry
+    "TelemetrySource", "TelemetryBus", "Snapshot",
+    "AmbientSensor", "EngineTelemetry", "MonitorTelemetry",
+    "AmbientSample", "ChipTempSample", "StepSample", "TickSample",
+    "StragglerSample", "HeartbeatSample",
+    # decisions
+    "Controller", "LutController", "ControllerStats",
+    "Action", "SetRails", "BoostRail", "Rebalance", "Throttle",
+    # actuation
+    "Actuator", "FleetActuator", "EngineActuator", "FleetReadout",
+    # planning + loop
+    "FleetPlanner", "PlanOut", "DynamicLut", "sweep_points",
+    "ControlLoop", "LoopReport",
+]

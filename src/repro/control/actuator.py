@@ -1,0 +1,172 @@
+"""Actuators — where controller decisions touch the (simulated) world.
+
+An :class:`Actuator` applies the :class:`~repro.control.controller.Action`
+dataclasses it understands and ignores the rest:
+
+- :class:`FleetActuator` — the rail/VID programmer of a simulated pod.  It
+  holds the *applied* per-chip ``(v_core, v_sram)`` (plus straggler boost
+  overrides that survive subsequent LUT writes), and after each control
+  tick re-evaluates chip power and the steady-state thermal field at the
+  applied rails (``settle``), producing the :class:`FleetReadout` the
+  telemetry loop feeds back — on real hardware this is the PMBus write plus
+  the next TSD readout.
+- :class:`EngineActuator` — admission control on the serve engine
+  (:class:`Throttle` -> ``engine.admit_cap``).
+
+On CPU there are no rails to program; the state/bookkeeping here is the
+deployable part, exactly as ``core.runtime`` frames it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core import thermal
+from repro.core import tpu_fleet as TF
+from repro.control.controller import (Action, BoostRail, Rebalance, SetRails,
+                                      Throttle)
+from repro.control.telemetry import ChipTempSample, Sample, Snapshot
+
+
+@runtime_checkable
+class Actuator(Protocol):
+    def apply(self, action: Action) -> bool:
+        """Apply one action; return True when handled."""
+        ...
+
+
+@dataclass
+class FleetReadout:
+    """Power/thermal state of the pod at the applied rails."""
+    pod_power_w: float
+    nominal_power_w: float
+    saving: float
+    t_mean: float
+    t_max: float
+
+
+class FleetActuator:
+    """Applied-rail state + thermal feedback for a ``TpuFleetSubstrate``.
+
+    Doubles as a :class:`TelemetrySource`: ``poll`` reports the chip
+    temperature field of the last ``settle``, closing the loop.
+    """
+
+    def __init__(self, substrate, prof: TF.StepProfile, lib: TF.TpuLibrary,
+                 t_amb: float = 25.0, planner=None):
+        self.substrate = substrate
+        self.prof = prof
+        self.lib = lib
+        self.planner = planner  # shares the cached nominal-baseline solve
+        chips = substrate.n_domains
+        self.v_core = np.full(chips, TF.V_CORE_NOM, np.float32)
+        self.v_sram = np.full(chips, TF.V_SRAM_NOM, np.float32)
+        self.boosted = set()  # chips pinned to nominal (straggler boost)
+        self.rebalance_log: List[Rebalance] = []
+        self.T = np.asarray(substrate.T0({"t_amb": t_amb}))
+        self.readout: Optional[FleetReadout] = None
+        self._nominal_cache = {}
+
+    @classmethod
+    def from_runtime(cls, rt, t_amb: Optional[float] = None):
+        """Build over an ``EnergyAwareRuntime``'s substrate/profile/lib."""
+        return cls(rt.substrate, rt.prof, rt.lib,
+                   t_amb=rt.t_amb if t_amb is None else t_amb,
+                   planner=rt.planner)
+
+    # ------------------------------------------------------------------
+    def apply(self, action: Action) -> bool:
+        if isinstance(action, SetRails):
+            self.v_core = np.broadcast_to(
+                np.asarray(action.v_core, np.float32),
+                self.v_core.shape).copy()
+            self.v_sram = np.broadcast_to(
+                np.asarray(action.v_sram, np.float32),
+                self.v_sram.shape).copy()
+            for c in self.boosted:  # boosts survive LUT/plan rewrites
+                self.v_core[c] = TF.V_CORE_NOM
+                self.v_sram[c] = TF.V_SRAM_NOM
+            return True
+        if isinstance(action, BoostRail):
+            self.boosted.add(action.chip)
+            self.v_core[action.chip] = action.v_core
+            self.v_sram[action.chip] = action.v_sram
+            return True
+        if isinstance(action, Rebalance):
+            self.rebalance_log.append(action)
+            self.boosted.discard(action.chip)
+            return True
+        return False
+
+    def release_boost(self, chip: int) -> None:
+        self.boosted.discard(chip)
+
+    # ------------------------------------------------------------------
+    def settle(self, snap: Snapshot,
+               util: Optional[np.ndarray] = None) -> FleetReadout:
+        """Evaluate power and the steady-state thermal field at the applied
+        rails under the sensed ambient (two power<->thermal sweeps from the
+        previous field — the quasi-static readout between control ticks)."""
+        t_amb = snap.t_amb if snap.t_amb is not None else 25.0
+        chips = self.substrate.n_domains
+        us = np.asarray(util if util is not None else np.ones(chips),
+                        np.float32)
+        m, n = self.substrate.grid
+        T = self.T
+        for _ in range(2):
+            p = np.asarray(TF.chip_power(self.lib, self.prof, self.v_core,
+                                         self.v_sram, 1.0, T)) * us
+            T = np.asarray(thermal.solve(p * 1e3, m, n, t_amb,
+                                         self.substrate.thermal_cfg))
+        self.T = T
+        pod = float(p.sum())
+        p_nom = self._nominal_power(float(t_amb), us)
+        self.readout = FleetReadout(
+            pod_power_w=pod, nominal_power_w=p_nom,
+            saving=1.0 - pod / p_nom if p_nom > 0 else 0.0,
+            t_mean=float(T.mean()), t_max=float(T.max()))
+        return self.readout
+
+    def _nominal_power(self, t_amb: float, us: np.ndarray) -> float:
+        if self.planner is not None:
+            # one definition of "nominal" per environment across the plane:
+            # the planner's cached nominal-only fixed point (PlanOut's
+            # baseline_power_w reference)
+            pb = self.planner.baseline_power(self.planner.env(t_amb, us))
+            return float(pb.sum())
+        # standalone fallback: relaxation sweeps at nominal rails
+        key = (round(t_amb, 3), us.tobytes())
+        if key not in self._nominal_cache:
+            m, n = self.substrate.grid
+            T = np.asarray(self.substrate.T0({"t_amb": t_amb}))
+            for _ in range(3):
+                p = np.asarray(TF.chip_power(
+                    self.lib, self.prof, TF.V_CORE_NOM, TF.V_SRAM_NOM,
+                    1.0, T)) * us
+                T = np.asarray(thermal.solve(p * 1e3, m, n, t_amb,
+                                             self.substrate.thermal_cfg))
+            self._nominal_cache[key] = float(p.sum())
+            if len(self._nominal_cache) > 64:
+                self._nominal_cache.pop(next(iter(self._nominal_cache)))
+        return self._nominal_cache[key]
+
+    # -- TelemetrySource -------------------------------------------------
+    def poll(self, now: float) -> List[Sample]:
+        return [ChipTempSample(self.T)]
+
+
+class EngineActuator:
+    """Admission control on a ``serve.Engine`` (Throttle -> admit_cap)."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.log: List[Throttle] = []
+
+    def apply(self, action: Action) -> bool:
+        if isinstance(action, Throttle):
+            self.engine.admit_cap = action.admit_cap
+            self.log.append(action)
+            return True
+        return False

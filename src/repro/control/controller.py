@@ -1,0 +1,217 @@
+"""Controllers — the decision layer between telemetry and actuation.
+
+A :class:`Controller` maps one telemetry :class:`~repro.control.telemetry.
+Snapshot` to a list of :class:`Action` commands.  Actions are plain
+dataclasses; every actuator applies the ones it understands and ignores the
+rest, so one decision can fan out to the fleet (rails) and the serve engine
+(admission) simultaneously.
+
+:class:`LutController` is the paper's §III-B online scheme:
+
+- **fast path** — the sensed ambient is answered from the interpolating
+  :class:`~repro.control.lut.DynamicLut` (O(log K), no solver).  This is
+  the steady-state path: quasi-static ambient drift rides the LUT.
+- **slow path** — a full :class:`repro.policy.Solver` fixed point
+  (via :class:`~repro.control.planner.FleetPlanner`) when the fast path
+  can no longer be trusted: an ambient *jump* beyond ``guard_band_c``
+  between ticks (the LUT is calibrated for quasi-static drift), a sensed
+  ambient outside the solved sweep, utilization drift beyond
+  ``util_band``, or chip temperature within ``t_headroom_c`` of the rated
+  junction limit.
+- **straggler policy** — flagged stragglers route through
+  ``FleetPlanner.mitigate``: rail-boost while nominal rails can still hold
+  the clock at the chip's temperature, rebalance otherwise.
+- **admission throttle** — when junction temperature crowds the limit the
+  serve engine's admission is capped; the cap lifts once temperature
+  drops out of the emergency band.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Protocol, Union, runtime_checkable
+
+import numpy as np
+
+from repro.core import tpu_fleet as TF
+from repro.control.lut import DynamicLut, sweep_points
+from repro.control.planner import FleetPlanner, PlanOut
+from repro.control.telemetry import Snapshot
+
+# ---------------------------------------------------------------------------
+# actions
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SetRails:
+    """Program (v_core, v_sram) — scalars (uniform pod) from the LUT fast
+    path, or per-chip arrays from a full solver replan."""
+    v_core: Union[float, np.ndarray]
+    v_sram: Union[float, np.ndarray]
+    source: str  # "lut" | "solver"
+    plan: Optional[PlanOut] = None  # attached on solver replans
+
+
+@dataclass(frozen=True)
+class BoostRail:
+    """Straggler mitigation: pin one chip back to nominal rails."""
+    chip: int
+    v_core: float
+    v_sram: float
+    extra_power_w: float
+
+
+@dataclass(frozen=True)
+class Rebalance:
+    """Rails alone cannot hold the clock — shed/move work off this chip."""
+    chip: int
+    reason: str
+
+
+@dataclass(frozen=True)
+class Throttle:
+    """Cap serve-engine admissions per tick (None lifts the throttle)."""
+    admit_cap: Optional[int]
+
+
+Action = Union[SetRails, BoostRail, Rebalance, Throttle]
+
+
+@runtime_checkable
+class Controller(Protocol):
+    def decide(self, snap: Snapshot) -> List[Action]: ...
+
+
+# ---------------------------------------------------------------------------
+# the §III-B online controller
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ControllerStats:
+    lut_hits: int = 0
+    replans: int = 0
+    boosts: int = 0
+    rebalances: int = 0
+    throttles: int = 0
+    unmapped: int = 0  # straggler events whose worker maps to no chip
+    replan_reasons: List[str] = field(default_factory=list)
+
+
+class LutController:
+    """Batched-LUT fast path with a guard-banded full-solver fallback."""
+
+    DEFAULT_SWEEP = (10.0, 45.0, 8)  # (lo degC, hi degC, knots)
+
+    def __init__(self, planner: FleetPlanner,
+                 lut: Optional[DynamicLut] = None,
+                 sweep=None,
+                 guard_band_c: float = 2.0,
+                 util_band: float = 0.25,
+                 t_headroom_c: float = 5.0,
+                 throttle_cap: int = 1):
+        self.planner = planner
+        if lut is None:
+            lo, hi, n = sweep if sweep is not None else self.DEFAULT_SWEEP
+            # ONE solve_batch call covers the whole ambient sweep
+            lut = planner.build_lut(sweep_points(lo, hi, n))
+        self.lut = lut
+        self.guard_band_c = guard_band_c
+        self.util_band = util_band
+        self.t_headroom_c = t_headroom_c
+        self.throttle_cap = throttle_cap
+        self.stats = ControllerStats()
+        self.plan: Optional[PlanOut] = None  # last full-solver plan
+        self._t_prev: Optional[float] = None
+        self._util_planned: Optional[np.ndarray] = None
+        self._T_warm = None  # warm start for replans
+        self._throttled = False
+
+    # ------------------------------------------------------------------
+    def _replan_reason(self, snap: Snapshot,
+                       util: Optional[np.ndarray]) -> Optional[str]:
+        t = snap.t_amb
+        if self._t_prev is None:
+            return "cold_start"
+        if abs(t - self._t_prev) > self.guard_band_c:
+            return f"ambient_jump({t - self._t_prev:+.1f}C)"
+        if not self.lut.covers(t, margin=self.guard_band_c):
+            return f"lut_range({t:.1f}C)"
+        if util is not None:
+            ref = (self._util_planned if self._util_planned is not None
+                   else np.ones_like(util))
+            if float(np.max(np.abs(util - ref))) > self.util_band:
+                return "util_drift"
+        if (snap.t_max is not None
+                and snap.t_max > TF.T_MAX_CHIP - self.t_headroom_c):
+            return f"thermal_emergency({snap.t_max:.1f}C)"
+        return None
+
+    def decide(self, snap: Snapshot,
+               util: Optional[np.ndarray] = None) -> List[Action]:
+        if snap.t_amb is None:
+            return []  # nothing sensed yet
+        actions: List[Action] = []
+        reason = self._replan_reason(snap, util)
+        if reason is not None:
+            plan, T = self.planner.plan_at(snap.t_amb, util, T0=self._T_warm)
+            self._T_warm = T
+            self._util_planned = (None if util is None
+                                  else np.asarray(util, np.float32))
+            self.plan = plan
+            self.stats.replans += 1
+            self.stats.replan_reasons.append(reason)
+            actions.append(SetRails(plan.v_core, plan.v_sram,
+                                    source="solver", plan=plan))
+        else:
+            vc, vs = self.lut.lookup(snap.t_amb)
+            self.stats.lut_hits += 1
+            actions.append(SetRails(vc, vs, source="lut"))
+        self._t_prev = snap.t_amb
+
+        # straggler policy: boost while nominal rails can hold the clock
+        chips = self.planner.substrate.n_domains
+        for s in snap.stragglers:
+            if not 0 <= s.chip < chips:  # unmappable worker name: no chip
+                self.stats.unmapped += 1  # to boost — surface, don't crash
+                continue
+            T_chip = (float(snap.t_chip[s.chip]) if snap.t_chip is not None
+                      else (self.plan.t_max if self.plan else 60.0))
+            ref = self.plan or _nominal_plan(self.planner)
+            d = self.planner.mitigate(ref, s.chip, T_chip)
+            if d["action"] == "boost_rail":
+                self.stats.boosts += 1
+                actions.append(BoostRail(d["chip"], d["v_core"],
+                                         d["v_sram"], d["extra_power_w"]))
+            else:
+                self.stats.rebalances += 1
+                actions.append(Rebalance(d["chip"], d["reason"]))
+
+        # admission throttle on thermal pressure (hysteresis: lift 2C lower)
+        if snap.t_max is not None:
+            hot = snap.t_max > TF.T_MAX_CHIP - self.t_headroom_c
+            cool = snap.t_max < TF.T_MAX_CHIP - self.t_headroom_c - 2.0
+            if hot and not self._throttled:
+                self._throttled = True
+                self.stats.throttles += 1
+                actions.append(Throttle(self.throttle_cap))
+            elif cool and self._throttled:
+                self._throttled = False
+                actions.append(Throttle(None))
+        return actions
+
+
+def _nominal_plan(planner: FleetPlanner) -> PlanOut:
+    """Fallback mitigation reference before any replan has run: nominal
+    rails, per-chip nominal busy power (only ``power_w[chip]`` is read)."""
+    chips = planner.substrate.n_domains
+    p_nom = float(TF.chip_power(planner.lib, planner.prof, TF.V_CORE_NOM,
+                                TF.V_SRAM_NOM, 1.0, 60.0))
+    return PlanOut(
+        v_core=np.full(chips, TF.V_CORE_NOM, np.float32),
+        v_sram=np.full(chips, TF.V_SRAM_NOM, np.float32),
+        f_rel=np.ones(chips, np.float32),
+        power_w=np.full(chips, p_nom, np.float32),
+        step_s=planner.prof.step_s, pod_power_w=p_nom * chips,
+        baseline_power_w=p_nom * chips, saving=0.0,
+        t_mean=60.0, t_max=60.0)

@@ -1,0 +1,58 @@
+"""ControlLoop — one telemetry -> controller -> actuator tick.
+
+The composition root of the control plane: a :class:`TelemetryBus` of
+sources, one :class:`Controller`, and a list of actuators.  ``step(now)``
+polls, decides, applies every action to every actuator (each takes the ones
+it understands), then lets stateful actuators *settle* (the
+:class:`FleetActuator` thermal re-evaluation whose readout feeds the next
+poll).  Reports accumulate in ``history`` for run summaries.
+"""
+from __future__ import annotations
+
+import inspect
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.control.controller import Action, Controller
+from repro.control.telemetry import Snapshot, TelemetryBus
+
+
+@dataclass
+class LoopReport:
+    now: float
+    snapshot: Snapshot
+    actions: List[Action]
+    readouts: List = field(default_factory=list)
+
+    @property
+    def readout(self):
+        """The first settled readout (the fleet one in standard wiring)."""
+        return self.readouts[0] if self.readouts else None
+
+
+class ControlLoop:
+    def __init__(self, bus: TelemetryBus, controller: Controller,
+                 actuators: Sequence):
+        self.bus = bus
+        self.controller = controller
+        self.actuators = list(actuators)
+        self.history: List[LoopReport] = []
+        self._wants_util = "util" in inspect.signature(
+            controller.decide).parameters
+
+    def step(self, now: float = 0.0,
+             util: Optional[np.ndarray] = None) -> LoopReport:
+        snap = self.bus.poll(now)
+        actions = (self.controller.decide(snap, util=util)
+                   if self._wants_util else self.controller.decide(snap))
+        for a in actions:
+            for act in self.actuators:
+                act.apply(a)
+        readouts = [act.settle(snap, util=util) for act in self.actuators
+                    if hasattr(act, "settle")]
+        rep = LoopReport(now=now, snapshot=snap, actions=list(actions),
+                         readouts=readouts)
+        self.history.append(rep)
+        return rep

@@ -1,0 +1,79 @@
+"""The §III-B dynamic-scheme LUT as a *lookup function*.
+
+``EnergyAwareRuntime.dynamic_lut`` (and the FPGA ``voltage_scaling.
+dynamic_lut``) return the paper's raw ``{t_amb: (v_core, v_sram)}`` table —
+one batched ``solve_batch`` call over the ambient sweep.  :class:`DynamicLut`
+wraps that table with linear interpolation between knots, clamped at the
+sweep edges, so the controller fast path can answer *any* sensed ambient in
+O(log K) without touching the solver.
+
+Rails fall with ambient (colder -> more margin -> lower rails), so linear
+interpolation between knots errs on the order of the knot spacing times the
+rail slope — ``tests/test_control.py`` pins interp-vs-full-solve error under
+the controller guard band.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Tuple
+
+import numpy as np
+
+
+class DynamicLut:
+    """Interpolated ``t_amb -> (v_core, v_sram)`` lookup over a solved sweep.
+
+    ``table`` is the raw dict produced by ``dynamic_lut`` /
+    ``FleetPlanner.lut``; knots are sorted internally.  Lookups outside
+    ``[t_min, t_max]`` clamp to the edge knots (the solver, not the
+    interpolant, is the right tool out there — see
+    :meth:`covers` and the controller's guard band).
+    """
+
+    def __init__(self, table: Dict[float, Tuple[float, float]]):
+        if not table:
+            raise ValueError("DynamicLut needs at least one solved knot")
+        knots = sorted(table.items())
+        self.t = np.asarray([k for k, _ in knots], np.float64)
+        self.vc = np.asarray([v[0] for _, v in knots], np.float64)
+        self.vs = np.asarray([v[1] for _, v in knots], np.float64)
+
+    # ------------------------------------------------------------------
+    @property
+    def t_min(self) -> float:
+        return float(self.t[0])
+
+    @property
+    def t_max(self) -> float:
+        return float(self.t[-1])
+
+    def covers(self, t_amb: float, margin: float = 0.0) -> bool:
+        """True when ``t_amb`` lies within the solved sweep (± margin)."""
+        return (self.t_min - margin) <= t_amb <= (self.t_max + margin)
+
+    def lookup(self, t_amb) -> Tuple[float, float]:
+        """Interpolated rails at ``t_amb`` (clamped at the sweep edges).
+
+        Accepts a scalar (returns floats) or an array (returns arrays).
+        """
+        vc = np.interp(t_amb, self.t, self.vc)  # np.interp clamps at edges
+        vs = np.interp(t_amb, self.t, self.vs)
+        if np.ndim(t_amb) == 0:
+            return float(vc), float(vs)
+        return vc, vs
+
+    def as_table(self) -> Dict[float, Tuple[float, float]]:
+        """The raw knot table (the legacy ``dynamic_lut`` return shape)."""
+        return {float(t): (float(c), float(s))
+                for t, c, s in zip(self.t, self.vc, self.vs)}
+
+    def __len__(self) -> int:
+        return int(self.t.shape[0])
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"DynamicLut({len(self)} knots, "
+                f"[{self.t_min:.1f}C, {self.t_max:.1f}C])")
+
+
+def sweep_points(lo: float, hi: float, n: int) -> Iterable[float]:
+    """Evenly spaced LUT knots over [lo, hi] — convenience for builders."""
+    return [float(x) for x in np.linspace(lo, hi, n)]

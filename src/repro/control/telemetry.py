@@ -1,0 +1,225 @@
+"""Telemetry — what the control plane *senses* (DESIGN.md §3).
+
+Every producer implements the tiny :class:`TelemetrySource` protocol:
+``poll(now) -> [samples]``.  Samples are plain dataclasses; the
+:class:`TelemetryBus` folds whatever arrived into one :class:`Snapshot`
+per control tick, which is all a :class:`~repro.control.controller.Controller`
+ever sees.  Sources are push- or pull-natured as fits the producer:
+
+- :class:`AmbientSensor` — the §III-B thermal sensor (TSD): a trace
+  function ``now -> degC`` for simulated diurnal sweeps, step functions,
+  or a constant.
+- :class:`EngineTelemetry` — subscribes to ``serve.Engine.on_tick`` and
+  buffers :class:`TickSample`\\ s (queue depth, active slots, tick wall
+  time) until the next poll.
+- :class:`MonitorTelemetry` — drains ``ft.monitor.StragglerDetector``
+  events (and optionally a ``Heartbeat`` dead-set) so mitigation becomes a
+  controller decision instead of a dangling helper.
+- :class:`~repro.control.actuator.FleetActuator` is also a source: it
+  reports the chip-temperature field of the rails it last applied, closing
+  the thermal loop.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, FrozenSet, List, Optional, Protocol,
+                    Sequence, Union, runtime_checkable)
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# samples
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AmbientSample:
+    """Ambient (inlet) temperature from the thermal sensor [degC]."""
+    t_amb: float
+
+
+@dataclass(frozen=True)
+class ChipTempSample:
+    """Per-chip junction temperature field [degC] (from the actuator's
+    last thermal evaluation — the simulated TSD readout)."""
+    t_chip: np.ndarray  # (chips,)
+
+
+@dataclass(frozen=True)
+class StepSample:
+    """One training/serving step wall time."""
+    worker: str
+    step: int
+    step_s: float
+
+
+@dataclass(frozen=True)
+class TickSample:
+    """One serve-engine scheduler tick."""
+    tick: int
+    queued: int
+    active: int
+    finished: int
+    tokens: int
+    tick_s: float
+
+
+@dataclass(frozen=True)
+class StragglerSample:
+    """A flagged straggler, mapped to the chip the controller can act on."""
+    worker: str
+    step: int
+    ratio: float
+    chip: int
+
+
+@dataclass(frozen=True)
+class HeartbeatSample:
+    dead: FrozenSet[str]
+
+
+Sample = Union[AmbientSample, ChipTempSample, StepSample, TickSample,
+               StragglerSample, HeartbeatSample]
+
+
+# ---------------------------------------------------------------------------
+# source protocol + snapshot
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class TelemetrySource(Protocol):
+    """Anything that can be polled for samples at a control tick."""
+
+    def poll(self, now: float) -> List[Sample]: ...
+
+
+@dataclass
+class Snapshot:
+    """Folded telemetry state at one control tick — the controller's whole
+    world view.  Scalar fields keep the latest sample; event-like fields
+    (stragglers, ticks) hold everything since the previous snapshot."""
+
+    now: float = 0.0
+    t_amb: Optional[float] = None
+    t_chip: Optional[np.ndarray] = None
+    step_s: Optional[float] = None
+    queued: int = 0
+    active: int = 0
+    tokens: int = 0
+    tick_s: Optional[float] = None
+    stragglers: List[StragglerSample] = field(default_factory=list)
+    dead: FrozenSet[str] = frozenset()
+
+    @property
+    def t_max(self) -> Optional[float]:
+        return None if self.t_chip is None else float(np.max(self.t_chip))
+
+
+class TelemetryBus:
+    """Polls every attached source and folds the samples into a Snapshot.
+
+    Scalar state (ambient, chip temps, queue depth) persists across ticks —
+    a source that has nothing new simply returns ``[]`` and the last known
+    value carries forward; events (stragglers) are delivered exactly once.
+    """
+
+    def __init__(self, sources: Sequence[TelemetrySource] = ()):
+        self.sources: List[TelemetrySource] = list(sources)
+        self._state = Snapshot()
+
+    def attach(self, source: TelemetrySource) -> None:
+        self.sources.append(source)
+
+    def poll(self, now: float) -> Snapshot:
+        s = self._state
+        s.now = now
+        s.stragglers = []
+        s.tokens = 0
+        for src in self.sources:
+            for smp in src.poll(now):
+                if isinstance(smp, AmbientSample):
+                    s.t_amb = float(smp.t_amb)
+                elif isinstance(smp, ChipTempSample):
+                    s.t_chip = np.asarray(smp.t_chip)
+                elif isinstance(smp, StepSample):
+                    s.step_s = float(smp.step_s)
+                elif isinstance(smp, TickSample):
+                    s.queued, s.active = smp.queued, smp.active
+                    s.tokens += smp.tokens
+                    s.tick_s = smp.tick_s
+                elif isinstance(smp, StragglerSample):
+                    s.stragglers.append(smp)
+                elif isinstance(smp, HeartbeatSample):
+                    s.dead = smp.dead
+        # hand the controller a stable copy; persistent state keeps arrays
+        return Snapshot(now=s.now, t_amb=s.t_amb, t_chip=s.t_chip,
+                        step_s=s.step_s, queued=s.queued, active=s.active,
+                        tokens=s.tokens, tick_s=s.tick_s,
+                        stragglers=list(s.stragglers), dead=s.dead)
+
+
+# ---------------------------------------------------------------------------
+# concrete sources
+# ---------------------------------------------------------------------------
+
+
+class AmbientSensor:
+    """Simulated TSD: ``trace`` is a constant or a ``now -> degC`` callable
+    (diurnal sine, step change, replayed datacenter trace)."""
+
+    def __init__(self, trace: Union[float, Callable[[float], float]]):
+        self.trace = trace
+
+    def poll(self, now: float) -> List[Sample]:
+        t = self.trace(now) if callable(self.trace) else self.trace
+        return [AmbientSample(float(t))]
+
+
+class EngineTelemetry:
+    """Buffers serve-engine tick stats; attach with
+    ``engine.on_tick.append(src.on_tick)``."""
+
+    def __init__(self) -> None:
+        self._buf: List[Sample] = []
+
+    def on_tick(self, smp: TickSample) -> None:
+        self._buf.append(smp)
+
+    def poll(self, now: float) -> List[Sample]:
+        out, self._buf = self._buf, []
+        return out
+
+
+def _default_chip_of(worker: str) -> int:
+    m = re.search(r"(\d+)$", worker)  # trailing rank: "host1-worker7" -> 7
+    return int(m.group(1)) if m else 0
+
+
+class MonitorTelemetry:
+    """Drains ``StragglerDetector.events`` (exactly once each) and reports
+    the ``Heartbeat`` dead-set; ``chip_of`` maps worker names to the chip
+    index the actuator can boost (default: trailing digits)."""
+
+    def __init__(self, detector, heartbeat=None,
+                 chip_of: Callable[[str], int] = _default_chip_of):
+        self.detector = detector
+        self.heartbeat = heartbeat
+        self.chip_of = chip_of
+        self._seen = len(detector.events)
+
+    def record_step(self, worker: str, step: int, step_s: float):
+        """Convenience passthrough so callers feed one object."""
+        return self.detector.record(worker, step, step_s)
+
+    def poll(self, now: float) -> List[Sample]:
+        out: List[Sample] = []
+        new = self.detector.events[self._seen:]
+        self._seen = len(self.detector.events)
+        for ev in new:
+            out.append(StragglerSample(ev.worker, ev.step, ev.ratio,
+                                       self.chip_of(ev.worker)))
+        if self.heartbeat is not None:
+            out.append(HeartbeatSample(frozenset(self.heartbeat.dead())))
+        return out

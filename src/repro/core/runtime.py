@@ -11,10 +11,15 @@ First-class trainer/server feature (launch/train.py --energy-policy ...):
 - ``overscale:g`` (§III-D): relaxes the contract by g for error-tolerant
   training; the overscale error profile is exposed for gradient injection.
 
-The planning loop is the shared ``repro.policy.Solver`` over a
-``TpuFleetSubstrate`` (DESIGN.md §2) — the same Substrate/Policy/Solver
-stack that runs the FPGA flows.  ``policy`` accepts either the legacy spec
-string above or a ``repro.policy.Policy`` instance directly.
+Since the ``repro.control`` redesign this class is a thin composition over
+the control plane's :class:`~repro.control.planner.FleetPlanner` (which owns
+the fixed point, the cached nominal baseline, the batched §III-B LUT build,
+and straggler mitigation decisions).  ``plan()`` / ``dynamic_lut()`` /
+``straggler_mitigation()`` keep their legacy signatures and reproduce the
+pre-refactor numbers (golden-pinned in tests/test_policy_api.py) — the PR-1
+wrapper playbook.  For the online loop itself, compose
+``repro.control.LutController`` / ``ControlLoop`` over ``self.planner``
+(``controller()`` below is the convenience constructor).
 
 On CPU this is a simulation (no rails to program), but the control layer —
 telemetry ingestion, planning, thermal feedback, straggler tie-in — is the
@@ -22,29 +27,16 @@ real, tested code a TPU deployment would drive VIDs with.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tpu_fleet as TF
 from repro import policy as pol
-
-
-@dataclass
-class PlanOut:
-    v_core: np.ndarray  # (chips,)
-    v_sram: np.ndarray
-    f_rel: np.ndarray
-    power_w: np.ndarray
-    step_s: float
-    pod_power_w: float
-    baseline_power_w: float
-    saving: float
-    t_mean: float
-    t_max: float
+from repro.control.lut import DynamicLut
+from repro.control.planner import FleetPlanner, PlanOut  # noqa: F401
+# PlanOut is re-exported: it remains the public result type of plan().
 
 
 class EnergyAwareRuntime:
@@ -68,49 +60,21 @@ class EnergyAwareRuntime:
         self.substrate = pol.tpu_substrate(profile, self.lib, grid,
                                            theta_chip)
         self.tc = self.substrate.thermal_cfg
+        self.planner = FleetPlanner(self.substrate, self.policy_obj,
+                                    profile, self.lib)
         self.T = self.substrate.T0({"t_amb": t_amb})  # warm estimate
         self.history: List[Dict] = []
 
     # ------------------------------------------------------------------
     def _env(self, util_scale) -> Dict:
-        chips = self.m * self.n
-        us = np.asarray(util_scale if util_scale is not None
-                        else np.ones(chips), np.float32)
-        return {"t_amb": self.t_amb, "util": us, "gamma": self.gamma}
+        return self.planner.env(self.t_amb, util_scale)
 
     def plan(self, util_scale: Optional[np.ndarray] = None,
              max_iters: int = 6, delta_t: float = 0.5) -> PlanOut:
         """Fixed point: choose rails -> thermal solve -> repeat."""
-        env = self._env(util_scale)
-        solver = pol.cached_solver(self.substrate, self.policy_obj,
-                                   delta_t, max_iters)
-        sol = solver.solve(env, T0=self.T)
-        self.T = jnp.asarray(sol.T)
-
-        # baseline: nominal rails at their own fixed point (fresh warm start)
-        bsolver = pol.cached_solver(self.substrate.nominal_only(),
-                                    pol.PowerSave(), delta_t, max_iters)
-        bsol = bsolver.solve(env)
-        pb = bsol.power  # legacy: last-search power, not re-evaluated
-
-        vc, vs = self.substrate.decode(sol.idx)
-        f = np.asarray(sol.f)
-        p = np.asarray(sol.power)
-        f_pod = float(f.min())  # synchronous step: slowest chip rules
-        step_s = float(TF.step_time(self.prof, f_pod))
-        if self.policy_obj.metric == "energy":
-            # energy-per-step ratio (P x t), the paper's Algorithm-2 metric
-            saving = 1.0 - (float(p.sum()) * step_s) / (
-                float(pb.sum()) * self.prof.step_s)
-        else:
-            saving = 1.0 - float(p.sum()) / float(pb.sum())
-        out = PlanOut(
-            v_core=vc, v_sram=vs, f_rel=f, power_w=p, step_s=step_s,
-            pod_power_w=float(p.sum()),
-            baseline_power_w=float(pb.sum()),
-            saving=saving,
-            t_mean=float(np.mean(sol.T)), t_max=float(np.max(sol.T)),
-        )
+        out, T = self.planner.plan(self._env(util_scale), T0=self.T,
+                                   max_iters=max_iters, delta_t=delta_t)
+        self.T = jnp.asarray(T)
         self.history.append({"saving": out.saving, "t_max": out.t_max,
                              "step_s": out.step_s})
         return out
@@ -121,39 +85,23 @@ class EnergyAwareRuntime:
 
         One batched solve over the ambient sweep; runtime state (``t_amb``,
         the warm temperature estimate ``T``) is not touched, so subsequent
-        ``plan()`` calls are unaffected.
+        ``plan()`` calls are unaffected.  Returns the raw knot table; use
+        :meth:`build_lut` for the interpolating controller fast path.
         """
-        chips = self.m * self.n
-        t = np.asarray([float(x) for x in t_ambs], np.float32)
-        B = len(t)
-        solver = pol.cached_solver(self.substrate, self.policy_obj,
-                                   delta_t=0.5, max_iters=6)
-        sol = solver.solve_batch({
-            "t_amb": t,
-            "util": np.ones((B, chips), np.float32),
-            "gamma": np.full((B,), self.gamma, np.float32),
-        })
-        out = {}
-        for i in range(B):
-            vc, vs = self.substrate.decode(sol.idx[i])
-            out[float(t[i])] = (float(np.median(vc)), float(np.median(vs)))
-        return out
+        return self.planner.lut(t_ambs)
+
+    def build_lut(self, t_ambs) -> DynamicLut:
+        """Interpolating (clamped) lookup over a solved ambient sweep."""
+        return self.planner.build_lut(t_ambs)
+
+    def controller(self, **kw):
+        """A ``repro.control.LutController`` over this runtime's planner."""
+        from repro.control.controller import LutController
+        return LutController(self.planner, **kw)
 
     # ------------------------------------------------------------------
     def straggler_mitigation(self, plan: PlanOut, chip: int,
                              slow_factor: float):
         """Hot/slow chip: try boosting its rails back to nominal (perf-
         preserving, costs power); report if even that can't hold the clock."""
-        T_chip = float(self.T[chip])
-        f_at_nom = float(TF.f_max_rel(self.lib, TF.V_CORE_NOM, TF.V_SRAM_NOM,
-                                      T_chip + 2.0))
-        if f_at_nom >= 1.0:
-            return {"action": "boost_rail", "chip": chip,
-                    "v_core": TF.V_CORE_NOM, "v_sram": TF.V_SRAM_NOM,
-                    "extra_power_w": float(
-                        TF.chip_power(self.lib, self.prof, TF.V_CORE_NOM,
-                                      TF.V_SRAM_NOM, 1.0, T_chip)
-                        - plan.power_w[chip])}
-        return {"action": "rebalance", "chip": chip,
-                "reason": f"T={T_chip:.1f}C cannot hold f_nom even at "
-                          f"nominal rails (f_max={f_at_nom:.3f})"}
+        return self.planner.mitigate(plan, chip, float(self.T[chip]))

@@ -5,14 +5,20 @@ throttling, ECC retries), one dead host, one hung collective. The pieces:
 
 - ``Heartbeat``: per-worker liveness registry with timeout -> dead-set.
 - ``StragglerDetector``: rolling step-time stats; flags outliers beyond
-  ``threshold`` x median. Mitigations are pluggable; the thermal tie-in
-  (core/runtime.py) BOOSTS the hot chip's rail (performance-preserving, the
-  paper's knob in reverse) before resorting to rebalancing.
+  ``threshold`` x median. The cross-worker median is maintained
+  *incrementally* (two-heap rolling median with lazy deletion), so a
+  fleet-scale monitor pays O(log W) per step instead of re-sorting every
+  buffered sample. Mitigations are pluggable; the thermal tie-in
+  (repro.control.LutController over core/runtime.py) BOOSTS the hot chip's
+  rail (performance-preserving, the paper's knob in reverse) before
+  resorting to rebalancing — ``repro.control.MonitorTelemetry`` routes the
+  events into the control plane.
 - ``retry_step``: bounded-retry wrapper around a train step for transient
   failures, with checkpoint-restore escalation.
 """
 from __future__ import annotations
 
+import heapq
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -45,6 +51,90 @@ class StragglerEvent:
     ratio: float
 
 
+class _RollingMedian:
+    """Two-heap median over a multiset with O(log n) add/remove.
+
+    ``lo`` is a max-heap (negated) holding the smallest ``n // 2`` values;
+    ``hi`` is a min-heap holding the rest, so ``hi[0]`` is the *upper*
+    median ``sorted(values)[n // 2]`` — the exact statistic the legacy
+    sort-everything implementation reported.
+
+    Removals are lazy with *per-heap* tombstones: a removal is attributed
+    to the heap that provably holds an instance of the value (``v`` is in
+    ``lo`` iff ``v <= max(lo)``, since the heaps partition the sorted
+    order), and the tombstone is consumed only when a copy surfaces at
+    *that* heap's top.  A single shared tombstone map would let the other
+    heap's prune consume it when duplicates straddle the lo/hi boundary,
+    desynchronizing the logical sizes.
+    """
+
+    def __init__(self):
+        self._lo: List[float] = []  # max-heap via negation
+        self._hi: List[float] = []  # min-heap
+        self._lo_n = 0  # logical (live) sizes
+        self._hi_n = 0
+        self._dead_lo: Dict[float, int] = {}
+        self._dead_hi: Dict[float, int] = {}
+
+    def __len__(self) -> int:
+        return self._lo_n + self._hi_n
+
+    def _prune_lo(self):
+        while self._lo and self._dead_lo.get(-self._lo[0], 0):
+            v = -heapq.heappop(self._lo)
+            self._dead_lo[v] -= 1
+            if not self._dead_lo[v]:
+                del self._dead_lo[v]
+
+    def _prune_hi(self):
+        while self._hi and self._dead_hi.get(self._hi[0], 0):
+            v = heapq.heappop(self._hi)
+            self._dead_hi[v] -= 1
+            if not self._dead_hi[v]:
+                del self._dead_hi[v]
+
+    def _rebalance(self):
+        want_lo = len(self) // 2
+        while self._lo_n > want_lo:
+            self._prune_lo()
+            v = -heapq.heappop(self._lo)
+            self._lo_n -= 1
+            heapq.heappush(self._hi, v)
+            self._hi_n += 1
+        while self._lo_n < want_lo:
+            self._prune_hi()
+            v = heapq.heappop(self._hi)
+            self._hi_n -= 1
+            heapq.heappush(self._lo, -v)
+            self._lo_n += 1
+
+    def add(self, v: float):
+        self._prune_lo()
+        if self._lo and v <= -self._lo[0]:
+            heapq.heappush(self._lo, -v)
+            self._lo_n += 1
+        else:
+            heapq.heappush(self._hi, v)
+            self._hi_n += 1
+        self._rebalance()
+
+    def remove(self, v: float):
+        """Remove one instance of ``v`` (must be present)."""
+        self._prune_lo()
+        if self._lo and v <= -self._lo[0]:  # an instance lives in lo
+            self._dead_lo[v] = self._dead_lo.get(v, 0) + 1
+            self._lo_n -= 1
+        else:
+            self._dead_hi[v] = self._dead_hi.get(v, 0) + 1
+            self._hi_n -= 1
+        self._rebalance()
+
+    @property
+    def median(self) -> float:
+        self._prune_hi()
+        return self._hi[0]
+
+
 class StragglerDetector:
     def __init__(self, threshold: float = 1.5, window: int = 32,
                  min_samples: int = 8):
@@ -53,14 +143,17 @@ class StragglerDetector:
         self.min_samples = min_samples
         self.times: Dict[str, deque] = {}
         self.events: List[StragglerEvent] = []
+        self._median = _RollingMedian()
 
     def record(self, worker: str, step: int, step_time: float):
         dq = self.times.setdefault(worker, deque(maxlen=self.window))
+        if len(dq) == self.window:  # deque is full: append evicts dq[0]
+            self._median.remove(dq[0])
         dq.append(step_time)
-        allt = sorted(t for d in self.times.values() for t in d)
-        if len(allt) < self.min_samples:
+        self._median.add(step_time)
+        if len(self._median) < self.min_samples:
             return None
-        median = allt[len(allt) // 2]
+        median = self._median.median
         if step_time > self.threshold * median:
             ev = StragglerEvent(worker, step, step_time, median,
                                 step_time / median)

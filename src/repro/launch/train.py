@@ -8,6 +8,12 @@ plan shardings on a host mesh, deterministic data pipeline, async
 checkpointing + restore (--resume), failure injection + bounded retry,
 straggler detection, and the EnergyAwareRuntime (paper technique) reporting
 per-step fleet savings from the step's measured utilization profile.
+
+With ``--energy-policy`` the run closes the loop through ``repro.control``:
+step times feed the straggler detector, whose events route through the
+``LutController`` (rail-boost-or-rebalance becomes a policy decision), and
+a ``FleetActuator`` applies rails + reports the thermal readout each
+control tick.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import control as ctl
 from repro import policy as pol
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import registry
@@ -72,6 +79,8 @@ def main(argv=None):
     ap.add_argument("--inject-failure-at", type=int, default=-1)
     ap.add_argument("--energy-policy", default="off",
                     help="off | power_save | min_energy | overscale:<g>")
+    ap.add_argument("--t-amb", type=float, default=25.0,
+                    help="ambient degC the control plane senses")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args(argv)
 
@@ -103,13 +112,21 @@ def main(argv=None):
     straggler = StragglerDetector()
 
     # paper technique: fleet energy controller fed by the step profile;
-    # the CLI spec becomes a first-class repro.policy Policy object
+    # the CLI spec becomes a first-class repro.policy Policy object, and the
+    # telemetry->controller->actuator loop closes over the same planner
     rt: Optional[energy_rt.EnergyAwareRuntime] = None
+    loop: Optional[ctl.ControlLoop] = None
     if args.energy_policy != "off":
         prof = TF.StepProfile.from_roofline(
             compute_s=0.7, memory_s=0.4, collective_s=0.15)
         rt = energy_rt.EnergyAwareRuntime(
-            prof, policy=pol.from_spec(args.energy_policy))
+            prof, policy=pol.from_spec(args.energy_policy),
+            t_amb=args.t_amb)
+        mon = ctl.MonitorTelemetry(straggler)
+        fleet = ctl.FleetActuator.from_runtime(rt)
+        loop = ctl.ControlLoop(
+            ctl.TelemetryBus([ctl.AmbientSensor(args.t_amb), mon, fleet]),
+            rt.controller(), [fleet])
 
     step = start_step
     t_train0 = time.time()
@@ -135,7 +152,22 @@ def main(argv=None):
             msg = (f"[train] step {step}: loss={float(metrics['loss']):.4f} "
                    f"acc={float(metrics['accuracy']):.3f} "
                    f"gnorm={float(metrics['grad_norm']):.2f} ({dt:.2f}s)")
-            if rt is not None:
+            if loop is not None:
+                # control tick: straggler events become policy decisions
+                # (rail boost / rebalance), rails land on the actuator.
+                # the energy line reads the controller's own plan — LUT
+                # ticks must not pay a fixed point just to print a log
+                rep = loop.step(now=float(step))
+                for a in rep.actions:
+                    if isinstance(a, (ctl.BoostRail, ctl.Rebalance)):
+                        print(f"[ctl] {a}")
+                rails = next(a for a in rep.actions
+                             if isinstance(a, ctl.SetRails))
+                p, ro = loop.controller.plan, rep.readout
+                msg += (f" | energy[{args.energy_policy}]: "
+                        f"save={p.saving*100:.1f}% Tmax={ro.t_max:.0f}C"
+                        f" | ctl[{rails.source}]")
+            elif rt is not None:  # planner without the loop (not wired)
                 p = rt.plan()
                 msg += (f" | energy[{args.energy_policy}]: "
                         f"save={p.saving*100:.1f}% Tmax={p.t_max:.0f}C")

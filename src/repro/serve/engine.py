@@ -5,18 +5,26 @@ slots (one jit'd prefill per admission batch) and advances all active slots
 with a single fused decode step per tick. Slots free on EOS/max-tokens.
 This is the slot-based continuous batching of production LLM servers, sized
 down to run the reduced configs on CPU.
+
+Control-plane hooks (repro.control, DESIGN.md §3): every tick emits a
+``TickSample`` (queue depth, active slots, tokens, wall time) to the
+``on_tick`` subscribers, and admission honours ``admit_cap`` — the
+actuation knob a ``Throttle`` action programs when junction temperature
+crowds the limit. Both default to off; an unwired engine behaves exactly
+as before.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.control.telemetry import TickSample
 from repro.models.model import Model
 from repro.serve.step import sample
 
@@ -33,7 +41,8 @@ class Request:
 class Engine:
     def __init__(self, model: Model, params, batch_slots: int = 4,
                  max_len: int = 256, eos_id: int = 1,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0,
+                 admit_cap: Optional[int] = None):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -47,6 +56,10 @@ class Engine:
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.key = jax.random.PRNGKey(0)
+        # control plane: admission throttle + tick telemetry subscribers
+        self.admit_cap = admit_cap
+        self.on_tick: List[Callable[[TickSample], None]] = []
+        self.ticks = 0
 
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode(p, t, c, pos))
@@ -57,6 +70,8 @@ class Engine:
     # -- admission: batch-prefill queued requests into free slots ------------
     def _admit(self):
         free = [i for i, r in enumerate(self.slot_req) if r is None]
+        if self.admit_cap is not None:  # throttled actuation
+            free = free[:max(self.admit_cap, 0)]
         if not free or not self.queue:
             return
         batch = [self.queue.pop(0) for _ in free[: len(self.queue)]]
@@ -89,6 +104,7 @@ class Engine:
 
     # -- one decode tick over all active slots --------------------------------
     def _tick(self):
+        t0 = time.perf_counter()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
@@ -110,12 +126,30 @@ class Engine:
                 req.done = True
                 self.finished.append(req)
                 self.slot_req[i] = None
+        if self.on_tick:
+            smp = TickSample(
+                tick=self.ticks, queued=len(self.queue),
+                active=sum(r is not None for r in self.slot_req),
+                finished=len(self.finished), tokens=len(active),
+                tick_s=time.perf_counter() - t0)
+            for cb in self.on_tick:
+                cb(smp)
+
+    def step(self) -> bool:
+        """One scheduler iteration (admit when idle, then decode); True
+        while there is still work.  ``run`` loops this; control-plane
+        drivers (examples/closed_loop_serving.py) interleave it with
+        ``ControlLoop.step`` ticks."""
+        if not (self.queue or any(self.slot_req)):
+            return False
+        if not any(self.slot_req):
+            self._admit()
+        self._tick()
+        self.ticks += 1
+        return bool(self.queue or any(self.slot_req))
 
     def run(self, max_ticks: int = 512) -> List[Request]:
         ticks = 0
-        while (self.queue or any(self.slot_req)) and ticks < max_ticks:
-            if not any(self.slot_req):
-                self._admit()
-            self._tick()
+        while ticks < max_ticks and self.step():
             ticks += 1
         return self.finished

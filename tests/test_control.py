@@ -1,0 +1,341 @@
+"""repro.control — the telemetry -> controller -> actuator control plane.
+
+Covers the ISSUE-2 closed-loop contract: the DynamicLut fast path stays
+within a rail guard band of the full solver, a diurnal ambient sweep keeps
+t_max under the rated junction limit while saving power vs nominal, an
+injected straggler triggers rail-boost-then-rebalance, a throttled serve
+engine still completes every request, the rolling straggler median matches
+the legacy sort-everything statistic, and the nominal-baseline solve is
+cached per environment.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro import control as ctl
+from repro.core import runtime as RT
+from repro.core import tpu_fleet as TF
+from repro.ft.monitor import StragglerDetector, _RollingMedian
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                        collective_s=0.2)
+
+
+@pytest.fixture(scope="module")
+def runtime(profile):
+    return RT.EnergyAwareRuntime(profile, policy="power_save")
+
+
+@pytest.fixture(scope="module")
+def lut(runtime):
+    return runtime.build_lut([10.0, 20.0, 30.0, 40.0, 50.0])
+
+
+class TestDynamicLut:
+    # one 10 mV rail step: the interpolant over 10C knots must stay within
+    # a grid step of the full fixed point (the controller's trust contract)
+    RAIL_GUARD_V = 0.010
+
+    def test_interp_error_under_guard_band(self, runtime, lut):
+        for t in (15.0, 25.0, 35.0, 45.0):
+            vc_full, vs_full = runtime.planner.lut([t])[t]
+            vc_i, vs_i = lut.lookup(t)
+            assert abs(vc_i - vc_full) <= self.RAIL_GUARD_V + 1e-9
+            assert abs(vs_i - vs_full) <= self.RAIL_GUARD_V + 1e-9
+
+    def test_clamps_at_sweep_edges(self, lut):
+        assert lut.lookup(-5.0) == lut.lookup(lut.t_min)
+        assert lut.lookup(90.0) == lut.lookup(lut.t_max)
+        assert lut.covers(30.0) and not lut.covers(55.0)
+        assert lut.covers(52.0, margin=2.0)
+
+    def test_wraps_raw_dynamic_lut_table(self, runtime):
+        raw = runtime.dynamic_lut([15.0, 30.0, 45.0])
+        assert isinstance(raw, dict)  # legacy contract: raw knot dict
+        wrapped = ctl.DynamicLut(raw)
+        for t, (vc, vs) in raw.items():
+            got = wrapped.lookup(t)
+            assert got[0] == pytest.approx(vc, abs=1e-6)
+            assert got[1] == pytest.approx(vs, abs=1e-6)
+        assert wrapped.as_table().keys() == raw.keys()
+
+    def test_array_lookup(self, lut):
+        vc, vs = lut.lookup(np.asarray([15.0, 25.0]))
+        assert vc.shape == (2,) and vs.shape == (2,)
+
+    def test_rejects_empty(self):
+        with pytest.raises(ValueError):
+            ctl.DynamicLut({})
+
+
+class TestClosedLoop:
+    def _loop(self, runtime, lut, trace, **ctrl_kw):
+        controller = runtime.controller(lut=lut, **ctrl_kw)
+        fleet = ctl.FleetActuator.from_runtime(runtime)
+        bus = ctl.TelemetryBus([ctl.AmbientSensor(trace), fleet])
+        return ctl.ControlLoop(bus, controller, [fleet]), controller, fleet
+
+    def test_diurnal_sweep_saves_power_bounded_tmax(self, runtime, lut):
+        trace = lambda now: 25.0 + 10.0 * np.sin(2 * np.pi * now / 24.0)
+        loop, controller, fleet = self._loop(runtime, lut, trace,
+                                             guard_band_c=3.0)
+        reports = [loop.step(now=float(h)) for h in range(24)]
+        t_maxes = [r.readout.t_max for r in reports]
+        savings = [r.readout.saving for r in reports]
+        assert max(t_maxes) < TF.T_MAX_CHIP  # junction limit held all day
+        assert np.mean(savings) > 0.0  # margin converted to power
+        # steady state rides the LUT; the solver runs only on the cold start
+        assert controller.stats.lut_hits > controller.stats.replans
+        assert controller.stats.replans >= 1
+
+    def test_ambient_jump_triggers_full_replan(self, runtime, lut):
+        trace = lambda now: 22.0 if now < 3 else 34.0  # forced step change
+        loop, controller, _ = self._loop(runtime, lut, trace,
+                                         guard_band_c=2.0)
+        for k in range(6):
+            loop.step(now=float(k))
+        assert controller.stats.replans == 2  # cold start + the jump
+        assert any(r.startswith("ambient_jump")
+                   for r in controller.stats.replan_reasons)
+        assert controller.stats.lut_hits == 4
+
+    def test_out_of_range_ambient_replans(self, runtime, lut):
+        loop, controller, _ = self._loop(runtime, lut, 52.0,
+                                         guard_band_c=1.0)
+        loop.step(now=0.0)  # cold start
+        loop.step(now=1.0)  # 52C is outside the [10, 50] sweep + guard
+        assert any(r.startswith("lut_range")
+                   for r in controller.stats.replan_reasons[1:])
+
+    def test_straggler_boost_then_rebalance(self, runtime, lut):
+        det = StragglerDetector(threshold=1.5, window=8, min_samples=4)
+        mon = ctl.MonitorTelemetry(det)
+        controller = runtime.controller(lut=lut, guard_band_c=2.0)
+        fleet = ctl.FleetActuator.from_runtime(runtime)
+        bus = ctl.TelemetryBus([ctl.AmbientSensor(25.0), mon, fleet])
+        loop = ctl.ControlLoop(bus, controller, [fleet])
+        loop.step(now=0.0)  # settle: chip temps ~warm, far from the limit
+
+        for s in range(4):  # healthy fleet baseline
+            mon.record_step("worker7", s, 1.0)
+        mon.record_step("worker7", 4, 1.9)  # slow step -> straggler event
+        rep = loop.step(now=1.0)
+        boosts = [a for a in rep.actions if isinstance(a, ctl.BoostRail)]
+        assert len(boosts) == 1 and boosts[0].chip == 7
+        assert boosts[0].extra_power_w > 0  # perf-preserving costs power
+        assert fleet.v_core[7] == pytest.approx(TF.V_CORE_NOM)
+        assert fleet.v_sram[7] == pytest.approx(TF.V_SRAM_NOM)
+        assert 7 in fleet.boosted
+
+        # chip so hot even nominal rails can't hold the clock -> rebalance
+        fleet.T = fleet.T.copy()
+        fleet.T[7] = 94.5
+        mon.record_step("worker7", 5, 2.2)
+        rep = loop.step(now=2.0)
+        rebs = [a for a in rep.actions if isinstance(a, ctl.Rebalance)]
+        assert len(rebs) == 1 and rebs[0].chip == 7
+        assert 7 not in fleet.boosted  # work moved off; boost released
+        assert controller.stats.boosts == 1
+        assert controller.stats.rebalances == 1
+
+    def test_thermal_pressure_throttles_then_lifts(self, runtime, lut):
+        class FakeEngine:
+            admit_cap = None
+
+        eng = FakeEngine()
+        controller = runtime.controller(lut=lut, guard_band_c=50.0,
+                                        t_headroom_c=5.0)
+        fleet = ctl.FleetActuator.from_runtime(runtime)
+        bus = ctl.TelemetryBus([ctl.AmbientSensor(25.0), fleet])
+        loop = ctl.ControlLoop(bus, controller,
+                               [fleet, ctl.EngineActuator(eng)])
+        loop.step(now=0.0)
+        fleet.T = fleet.T.copy()
+        fleet.T[:] = TF.T_MAX_CHIP - 1.0  # emergency band
+        rep = loop.step(now=1.0)
+        assert eng.admit_cap == controller.throttle_cap
+        assert any(isinstance(a, ctl.Throttle) for a in rep.actions)
+        # a thermal emergency also forces a replan regardless of drift
+        assert any(r.startswith("thermal_emergency")
+                   for r in controller.stats.replan_reasons)
+        # cooled back down -> throttle lifts
+        fleet.T = np.asarray(runtime.substrate.T0({"t_amb": 25.0})).copy()
+        loop.step(now=2.0)
+        loop.step(now=3.0)
+        assert eng.admit_cap is None
+
+
+class TestWorkerChipMapping:
+    def test_trailing_digits_only(self):
+        from repro.control.telemetry import _default_chip_of
+        assert _default_chip_of("worker7") == 7
+        assert _default_chip_of("host1-worker7") == 7  # not 17
+        assert _default_chip_of("tpu-v4-rank12") == 12
+        assert _default_chip_of("coordinator") == 0
+
+    def test_unmapped_chip_does_not_crash_the_tick(self, runtime, lut):
+        controller = runtime.controller(lut=lut)
+        snap = ctl.Snapshot(t_amb=25.0, stragglers=[
+            ctl.StragglerSample("w", 0, 2.0, chip=999)])  # out of range
+        actions = controller.decide(snap)
+        assert not any(isinstance(a, (ctl.BoostRail, ctl.Rebalance))
+                       for a in actions)
+        assert controller.stats.unmapped == 1
+
+
+class TestTelemetryBus:
+    def test_scalar_state_persists_events_drain(self):
+        class OneShot:
+            def __init__(self):
+                self.fired = False
+
+            def poll(self, now):
+                if self.fired:
+                    return []
+                self.fired = True
+                return [ctl.AmbientSample(30.0),
+                        ctl.StragglerSample("w1", 3, 2.0, 1)]
+
+        bus = ctl.TelemetryBus([OneShot()])
+        s1 = bus.poll(0.0)
+        assert s1.t_amb == 30.0 and len(s1.stragglers) == 1
+        s2 = bus.poll(1.0)
+        assert s2.t_amb == 30.0  # latest value carries forward
+        assert s2.stragglers == []  # events deliver exactly once
+
+
+class TestRollingMedian:
+    def test_matches_legacy_sorted_median(self):
+        rng = np.random.default_rng(0)
+        det = StragglerDetector(threshold=1e9, window=5, min_samples=1)
+        from collections import deque
+        shadow = {}
+        for i in range(400):
+            w = f"worker{int(rng.integers(0, 6))}"
+            v = float(rng.uniform(0.5, 3.0))
+            det.record(w, i, v)
+            dq = shadow.setdefault(w, deque(maxlen=5))
+            dq.append(v)
+            allt = sorted(t for d in shadow.values() for t in d)
+            assert det._median.median == allt[len(allt) // 2]
+
+    def test_boundary_duplicate_removal(self):
+        # regression: duplicates straddling the lo/hi boundary must not
+        # desync the heap sizes when one instance is removed
+        m = _RollingMedian()
+        for v in [1.0, 2.0, 2.0, 3.0]:
+            m.add(v)
+        m.remove(2.0)
+        assert m.median == 2.0  # {1,2,3} -> sorted[1]
+        assert len(m) == 3
+
+    def test_fuzz_quantized_times_vs_sorted(self):
+        # step times that quantize to equal values exercise the boundary-
+        # straddling duplicate path on every window eviction
+        rng = np.random.default_rng(7)
+        det = StragglerDetector(threshold=1e9, window=3, min_samples=1)
+        from collections import deque
+        shadow = {}
+        for i in range(300):
+            w = f"worker{int(rng.integers(0, 4))}"
+            v = float(rng.choice([1.0, 1.5, 2.0]))
+            det.record(w, i, v)
+            dq = shadow.setdefault(w, deque(maxlen=3))
+            dq.append(v)
+            allt = sorted(t for d in shadow.values() for t in d)
+            assert det._median.median == allt[len(allt) // 2]
+
+    def test_duplicates_and_removals(self):
+        m = _RollingMedian()
+        for v in [1.0, 1.0, 1.0, 2.0, 2.0]:
+            m.add(v)
+        assert m.median == 1.0  # sorted[2]
+        m.remove(1.0)
+        assert m.median == 2.0  # [1,1,2,2] -> sorted[2]
+        m.remove(2.0)
+        assert m.median == 1.0  # [1,1,2]
+        assert len(m) == 3
+
+    def test_detector_still_flags_stragglers(self):
+        det = StragglerDetector(threshold=1.5, window=16, min_samples=4)
+        for s in range(6):
+            assert det.record("w0", s, 1.0) is None
+        ev = det.record("w1", 6, 1.8)
+        assert ev is not None and ev.ratio == pytest.approx(1.8)
+
+
+class TestBaselineCache:
+    def test_baseline_solved_once_per_environment(self, profile):
+        rt = RT.EnergyAwareRuntime(profile, policy="power_save")
+        rt.plan()
+        rt.plan()
+        assert rt.planner.baseline_solves == 1  # same env -> cache hit
+        rt.t_amb = 31.0  # new environment -> one more solve
+        rt.plan()
+        rt.plan()
+        assert rt.planner.baseline_solves == 2
+        util = np.ones(rt.m * rt.n, np.float32)
+        util[:8] = 0.5  # new utilization -> new environment
+        rt.plan(util_scale=util)
+        assert rt.planner.baseline_solves == 3
+
+    def test_cached_baseline_matches_policy_switch(self, profile):
+        # the cached baseline is policy-independent: two policies on the
+        # same environment report the same nominal reference power
+        a = RT.EnergyAwareRuntime(profile, policy="power_save").plan()
+        b = RT.EnergyAwareRuntime(profile, policy="overscale:1.2").plan()
+        assert a.baseline_power_w == pytest.approx(b.baseline_power_w,
+                                                   rel=1e-6)
+
+
+class TestEngineControlPlane:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        from repro.configs import registry
+        from repro.models.model import Model
+        cfg = registry.get("llama3.2-1b").reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        return cfg, model, params
+
+    def test_throttled_engine_completes_all_requests(self, setup):
+        from repro.serve.engine import Engine, Request
+        cfg, model, params = setup
+        eng = Engine(model, params, batch_slots=4, max_len=64,
+                     admit_cap=1)  # throttled actuation
+        for rid in range(5):
+            eng.submit(Request(rid, np.arange(3 + rid) % cfg.vocab_size,
+                               max_new=4))
+        done = eng.run()
+        assert len(done) == 5
+        for r in done:
+            assert 1 <= len(r.out) <= 4
+
+    def test_tick_telemetry_reaches_snapshot(self, setup):
+        from repro.serve.engine import Engine, Request
+        cfg, model, params = setup
+        eng = Engine(model, params, batch_slots=2, max_len=64)
+        src = ctl.EngineTelemetry()
+        eng.on_tick.append(src.on_tick)
+        for rid in range(3):
+            eng.submit(Request(rid, np.arange(4) % cfg.vocab_size,
+                               max_new=3))
+        bus = ctl.TelemetryBus([src])
+        eng.run()
+        snap = bus.poll(0.0)
+        assert snap.tokens > 0  # decode ticks reported their tokens
+        assert snap.tick_s is not None and snap.tick_s > 0
+        assert snap.queued == 0 and snap.active == 0  # drained at the end
+
+    def test_throttle_action_programs_engine(self, setup):
+        from repro.serve.engine import Engine
+        cfg, model, params = setup
+        eng = Engine(model, params, batch_slots=2, max_len=32)
+        act = ctl.EngineActuator(eng)
+        assert act.apply(ctl.Throttle(1)) and eng.admit_cap == 1
+        assert act.apply(ctl.Throttle(None)) and eng.admit_cap is None
+        assert not act.apply(ctl.SetRails(0.7, 0.8, "lut"))  # not ours
