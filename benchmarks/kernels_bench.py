@@ -3,10 +3,17 @@ the CPU interpreter executes the kernel body; TPU perf comes from the
 roofline, not these numbers). Also times each kernel's jnp reference, which
 IS meaningful on CPU.
 
+The ``thermal_solve_*_us`` family times the full steady-state solve at the
+paper's 92x92 / theta_ja=12 reference point through each solver tier
+(multigrid cold + warm restart, chunked Jacobi, seed Jacobi) — the number
+every fixed point in the repo bottoms out in.
+
 ``--smoke`` additionally runs the closed-loop serving tick benchmark
 (repro.control): engine tokens/s, LUT-fast-path control tick latency, and
 full-solver replan latency. ``--json PATH`` dumps every number for the CI
-artifact."""
+artifact. ``--check BASELINE.json`` compares against a committed baseline
+(BENCH_kernels.json) and fails on >2x regression of any jnp-path ``*_us``
+entry (interpret-mode entries are structural and excluded)."""
 from __future__ import annotations
 
 import time
@@ -53,6 +60,7 @@ def run(quick: bool = False) -> Dict:
         lambda *a: ops.mamba_scan_b(*a, chunk=64), xh, dt, A, B, Cm)
 
     m = 92
+    from repro.core import thermal
     from repro.core.thermal import ThermalConfig, conductances
     tc = ThermalConfig(theta_ja=12.0)
     g_v, g_lat = conductances(m, m, tc)
@@ -68,6 +76,24 @@ def run(quick: bool = False) -> Dict:
         lambda t, p, d: ops.thermal_sweep(t, p, d, g_lat=g_lat,
                                           g_v_tamb=g_v * 25.0, iters=64),
         T, Pw, diag)
+
+    # full steady-state solve, 92x92 theta_ja=12 (the paper's Table-II die):
+    # multigrid tier (cold + warm restart) vs the chunked and seed (one
+    # reduce per sweep) Jacobi relaxations — all pure-jnp on CPU
+    P_mw = Pw.reshape(-1) * 1e3
+    tc_seed = ThermalConfig(theta_ja=12.0, solver="jacobi", check_every=1)
+    tc_chunk = ThermalConfig(theta_ja=12.0, solver="jacobi")
+    out["thermal_solve_multigrid_us"] = _time(
+        lambda p: thermal.solve(p, m, m, 25.0, tc), P_mw)
+    T_conv = thermal.solve(P_mw, m, m, 25.0, tc)
+    out["thermal_solve_multigrid_warm_us"] = _time(
+        lambda p, t0: thermal.solve(p, m, m, 25.0, tc, t0), P_mw, T_conv)
+    out["thermal_solve_jacobi_chunked_us"] = _time(
+        lambda p: thermal.solve(p, m, m, 25.0, tc_chunk), P_mw)
+    out["thermal_solve_jacobi_seed_us"] = _time(
+        lambda p: thermal.solve(p, m, m, 25.0, tc_seed), P_mw)
+    out["thermal_solve_speedup"] = (out["thermal_solve_jacobi_seed_us"]
+                                    / out["thermal_solve_multigrid_us"])
 
     M = 128 if quick else 256
     a8 = jax.random.randint(jax.random.fold_in(key, 10), (M, M), -128, 127,
@@ -147,7 +173,41 @@ def closed_loop(quick: bool = True) -> Dict:
         loop.step(now=2.0 + k)
     out["ctl_tick_ms"] = (time.perf_counter() - t0) / iters * 1e3
     assert controller.stats.replans == 2 and controller.stats.lut_hits == iters
+
+    # the replan core in isolation (warm jit, warm-started fixed point,
+    # averaged — replan_latency_ms above is one tick incl. settle/telemetry
+    # and is noise-dominated): Algorithm 1 rails -> thermal solve -> repeat
+    rt.plan()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        rt.plan()
+    out["fleet_plan_ms"] = (time.perf_counter() - t0) / 5 * 1e3
     return out
+
+
+REGRESSION_FACTOR = 2.0  # --check fails past this ratio (CI machine slack)
+
+
+def check_regressions(baseline: Dict, current: Dict,
+                      factor: float = REGRESSION_FACTOR):
+    """Compare jnp-path ``*_us`` entries against the committed baseline.
+
+    Interpret-mode entries are structural (the CPU interpreter's wall time
+    says nothing about TPU perf) and throughput/latency entries of the
+    closed-loop benchmark are load-dependent; the stable regression signal
+    is the jnp-reference kernel + solver timings. Returns offending
+    ``(key, baseline, current)`` rows and the baseline keys absent from
+    the current results (a missing key would otherwise silently disable
+    its gate — the caller must treat it as a failure)."""
+    bad, missing = [], []
+    for k in sorted(baseline):
+        if not k.endswith("_us") or "interpret" in k:
+            continue
+        if k not in current:
+            missing.append(k)
+        elif current[k] > baseline[k] * factor:
+            bad.append((k, baseline[k], current[k]))
+    return bad, missing
 
 
 def main(argv=None) -> None:
@@ -162,18 +222,51 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced shapes; assert every kernel runs")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="dump results as JSON (the CI artifact)")
+                    help="dump results as JSON (the CI artifact); with "
+                         "--check (and no --smoke), an existing file here "
+                         "is reused as the current numbers")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="fail on >2x regression of any jnp-path *_us "
+                         "entry vs this baseline JSON (BENCH_kernels.json)")
     args = ap.parse_args(argv)
-    res = run(quick=args.smoke)
-    if args.smoke:
-        res.update(closed_loop(quick=True))
-    for k, v in res.items():
-        print(f"{k},{v:.3f}" if v < 100 else f"{k},{v:.0f}")
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(res, f, indent=2, sort_keys=True)
-        print(f"[json] wrote {args.json}")
-    assert all(v > 0 for v in res.values())
+
+    if (args.check and not args.smoke and args.json
+            and os.path.exists(args.json)):
+        with open(args.json) as f:  # reuse the artifact just benchmarked
+            res = json.load(f)
+    else:
+        # the committed baseline is produced by --smoke, so a --check run
+        # must measure smoke shapes too (full shapes are 4-5x slower and
+        # would trip the gate spuriously)
+        smoke = args.smoke or bool(args.check)
+        res = run(quick=smoke)
+        if smoke:
+            res.update(closed_loop(quick=True))
+        for k, v in res.items():
+            print(f"{k},{v:.3f}" if v < 100 else f"{k},{v:.0f}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(res, f, indent=2, sort_keys=True)
+            print(f"[json] wrote {args.json}")
+        assert all(v > 0 for v in res.values())
+
+    if args.check:
+        with open(args.check) as f:
+            baseline = json.load(f)
+        bad, missing = check_regressions(baseline, res)
+        for k, b, c in bad:
+            print(f"[check] REGRESSION {k}: {b:.1f} -> {c:.1f} us "
+                  f"({c / b:.2f}x)")
+        for k in missing:
+            print(f"[check] MISSING {k}: in {args.check} but not in the "
+                  f"current results (rename it in both, or refresh the "
+                  f"baseline)")
+        if bad or missing:
+            sys.exit(1)
+        n = sum(1 for k in baseline
+                if k.endswith("_us") and "interpret" not in k)
+        print(f"[check] OK: {n} jnp-path *_us entries within "
+              f"{REGRESSION_FACTOR}x of {args.check}")
 
 
 if __name__ == "__main__":

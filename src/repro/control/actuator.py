@@ -118,8 +118,10 @@ class FleetActuator:
         for _ in range(2):
             p = np.asarray(TF.chip_power(self.lib, self.prof, self.v_core,
                                          self.v_sram, 1.0, T)) * us
+            # warm-start from the applied-rail field: between control ticks
+            # the steady state drifts by well under a degree
             T = np.asarray(thermal.solve(p * 1e3, m, n, t_amb,
-                                         self.substrate.thermal_cfg))
+                                         self.substrate.thermal_cfg, T))
         self.T = T
         pod = float(p.sum())
         p_nom = self._nominal_power(float(t_amb), us)
@@ -146,7 +148,7 @@ class FleetActuator:
                     self.lib, self.prof, TF.V_CORE_NOM, TF.V_SRAM_NOM,
                     1.0, T)) * us
                 T = np.asarray(thermal.solve(p * 1e3, m, n, t_amb,
-                                             self.substrate.thermal_cfg))
+                                             self.substrate.thermal_cfg, T))
             self._nominal_cache[key] = float(p.sum())
             if len(self._nominal_cache) > 64:
                 self._nominal_cache.pop(next(iter(self._nominal_cache)))

@@ -65,6 +65,7 @@ class FleetPlanner:
         self.max_iters = max_iters
         self._baseline: "OrderedDict" = OrderedDict()
         self.baseline_solves = 0  # cache-miss counter (tests/benchmarks)
+        self.T_last: Optional[np.ndarray] = None  # last converged field
 
     # ------------------------------------------------------------------
     def env(self, t_amb: float, util: Optional[np.ndarray] = None) -> Dict:
@@ -113,6 +114,7 @@ class FleetPlanner:
         dt = self.delta_t if delta_t is None else delta_t
         solver = pol.cached_solver(self.substrate, self.policy, dt, mi)
         sol = solver.solve(env, T0=T0)
+        self.T_last = np.asarray(sol.T)
 
         pb = self.baseline_power(env, dt, mi)
 
@@ -138,10 +140,17 @@ class FleetPlanner:
 
     def plan_at(self, t_amb: float, util: Optional[np.ndarray] = None,
                 T0=None) -> Tuple[PlanOut, np.ndarray]:
-        """Plan for a sensed environment (cold start when ``T0`` is None)."""
+        """Plan for a sensed environment.
+
+        ``T0=None`` warm-starts from the last converged field (ambient
+        replans move the steady state by a few degrees, so the multigrid
+        solve restarts within a V-cycle or two of converged); cold start
+        only before any plan has run.
+        """
         env = self.env(t_amb, util)
         if T0 is None:
-            T0 = self.substrate.T0({"t_amb": t_amb})
+            T0 = (self.T_last if self.T_last is not None
+                  else self.substrate.T0({"t_amb": t_amb}))
         return self.plan(env, T0)
 
     # ------------------------------------------------------------------

@@ -1,8 +1,9 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True in this CPU container (TPU is the compile
-TARGET; interpret mode executes the kernel body for correctness validation).
-On real TPU runtimes set ``repro.kernels.ops.INTERPRET = False``.
+``INTERPRET = None`` (the default) auto-detects per call: compiled on a TPU
+backend, interpreter everywhere else (interpret mode executes the kernel
+body for correctness validation on CPU). Set ``repro.kernels.ops.INTERPRET``
+to True/False to force a mode.
 """
 from __future__ import annotations
 
@@ -17,14 +18,19 @@ from repro.kernels.overscale_matmul import (bit_probs_to_cdf,
                                             quantize)
 from repro.kernels.thermal_stencil import thermal_stencil as _stencil
 
-INTERPRET = True
+INTERPRET = None  # None = auto (compiled on TPU, interpreter elsewhere)
+
+
+def _interpret() -> bool:
+    return (jax.default_backend() != "tpu" if INTERPRET is None
+            else INTERPRET)
 
 
 def flash_attention_bh(q, k, v, *, causal=True, bq=128, bk=128):
     """Batched/multi-head wrapper: q:(B,S,H,D), k/v:(B,T,H,D)."""
     def one(q1, k1, v1):
         return _flash(q1, k1, v1, causal=causal, bq=bq, bk=bk,
-                      interpret=INTERPRET)
+                      interpret=_interpret())
 
     return jax.vmap(jax.vmap(one, in_axes=(1, 1, 1), out_axes=1))(q, k, v)
 
@@ -32,15 +38,15 @@ def flash_attention_bh(q, k, v, *, causal=True, bq=128, bk=128):
 def mamba_scan_b(xh, dt, A, B, C, *, chunk=256):
     """Batched wrapper: xh:(b,S,H,P), dt:(b,S,H), B/C:(b,S,H,N)."""
     def one(x1, d1, b1, c1):
-        return _mamba(x1, d1, A, b1, c1, chunk=chunk, interpret=INTERPRET)
+        return _mamba(x1, d1, A, b1, c1, chunk=chunk, interpret=_interpret())
 
     return jax.vmap(one)(xh, dt, B, C)
 
 
-def thermal_sweep(T, P, diag, *, g_lat, g_v_tamb, iters=64):
+def thermal_sweep(T, P, diag, *, g_lat, g_v_tamb, iters=64, phase=None):
     return _stencil(T, P, diag, g_lat=g_lat, g_v_tamb=g_v_tamb, iters=iters,
-                    interpret=INTERPRET)
+                    phase=phase, interpret=_interpret())
 
 
 def overscale_mm(a, b, u_gate, u_bit, cdf):
-    return _omm(a, b, u_gate, u_bit, cdf, interpret=INTERPRET)
+    return _omm(a, b, u_gate, u_bit, cdf, interpret=_interpret())

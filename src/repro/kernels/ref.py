@@ -27,8 +27,10 @@ def overscale_matmul_ref(a, b, u_gate, u_bit, cdf):
     return jax.lax.bitwise_xor(acc, mask)
 
 
-def thermal_stencil_ref(T, P, diag, g_lat, g_v_tamb, iters: int):
-    """T,P,diag:(m,n); iters Jacobi sweeps."""
+def thermal_stencil_ref(T, P, diag, g_lat, g_v_tamb, iters: int,
+                        phase=None):
+    """T,P,diag:(m,n); iters Jacobi (phase=None) or red-black GS sweeps
+    starting on checkerboard colour ``phase`` (0|1)."""
     def nbr(T):
         up = jnp.pad(T[1:, :], ((0, 1), (0, 0)))
         dn = jnp.pad(T[:-1, :], ((1, 0), (0, 0)))
@@ -36,8 +38,20 @@ def thermal_stencil_ref(T, P, diag, g_lat, g_v_tamb, iters: int):
         rt = jnp.pad(T[:, :-1], ((0, 0), (1, 0)))
         return up + dn + lf + rt
 
-    def body(_, T):
-        return (P + g_v_tamb + g_lat * nbr(T)) / diag
+    if phase is None:
+        def body(_, T):
+            return (P + g_v_tamb + g_lat * nbr(T)) / diag
+    else:
+        m, n = P.shape
+        row = jax.lax.broadcasted_iota(jnp.int32, (m, n), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+        par = (row + col) % 2
+
+        def body(_, T):
+            for p in (phase, 1 - phase):
+                T = jnp.where(par == p,
+                              (P + g_v_tamb + g_lat * nbr(T)) / diag, T)
+            return T
 
     return jax.lax.fori_loop(0, iters, body, T)
 

@@ -11,7 +11,7 @@ The loop is a single ``lax.while_loop`` — no Python iteration anywhere:
     f      = policy.frequency(d)                #   "
     p      = substrate.cand_power(T, f)         #   "
     idx    = argmin over feasible candidates    # (domains,)
-    T_new  = thermal.solve(site_power(idx))     # (sites,)
+    T_new  = thermal.solve(site_power(idx), T0=T)  # (sites,) warm-started
     done   = ||T_new - T||_inf < delta_t
 
 ``d_worst`` (the STA / step contract) is computed once by the substrate and
@@ -123,7 +123,12 @@ class Solver:
             idx, f_sel, p_sel, obj_sel = self._select(st.T, st.it, st.idx,
                                                       env)
             sp = sub.site_power(st.T, idx, f_sel, env)
-            T_new = thermal.solve(sp, m, n, env["t_amb"], sub.thermal_cfg)
+            # warm-start the multigrid solve from the previous iteration's
+            # field: consecutive fixed-point iterates differ by at most a
+            # rail step's worth of heating, so late iterations converge in
+            # one or two V-cycles
+            T_new = thermal.solve(sp, m, n, env["t_amb"], sub.thermal_cfg,
+                                  st.T)
             dT = jnp.max(jnp.abs(T_new - st.T))
             new = _State(
                 T=T_new, it=st.it + 1, idx=idx, f_sel=f_sel, p_sel=p_sel,
@@ -194,10 +199,8 @@ class Solver:
                     f"env leaf {k!r} must lead with the batch axis {B}, "
                     f"got shape {v.shape}")
         if T0 is None:
-            T0 = jnp.stack([
-                self.substrate.T0(
-                    jax.tree_util.tree_map(lambda x: x[b], envs))
-                for b in range(B)])
+            # one vmapped device call instead of B host-side T0 solves
+            T0 = jax.vmap(self.substrate.T0)(envs)
         return jax.tree_util.tree_map(
             lambda x: jax.device_get(x), self._jit_batch(envs, T0))
 

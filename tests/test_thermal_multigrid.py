@@ -1,0 +1,195 @@
+"""Multigrid thermal solver: tier parity, warm starts, batch T0, RB kernel.
+
+The multigrid tier must land on the same steady state as the (seed) Jacobi
+relaxation — the fixed point is solver-independent at the configured
+tolerance — from any warm start, at any grid shape the repo uses (1x1
+degenerate, odd dims, the paper's 92x92 Table-II die, 256x256 stress), for
+both package classes (theta_ja 2 / 12) and adversarial power maps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import policy as pol
+from repro.core import thermal, tpu_fleet as TF
+from repro.core.thermal import ThermalConfig
+from repro.kernels import ops, ref as kref
+
+# |mg - jacobi|_inf bound: the seed Jacobi stop (per-sweep |dT| < tol)
+# leaves a true error of ~tol * rho/(1-rho) = tol * 4*spreading; multigrid
+# stops at the f32 residual floor, far tighter. 2e-2 covers theta=12's
+# 5e-3 degC Jacobi slack plus f32 noise with margin, and would still catch
+# any real operator/transfer bug (those show up at whole degrees).
+PARITY_ATOL = 2e-2
+
+SEED_JACOBI = dict(solver="jacobi", check_every=1)
+
+
+def _power_maps(cells: int):
+    rng = np.random.default_rng(3)
+    hot = np.zeros(cells)
+    hot[cells // 2] = 500.0  # one 500 mW hot spot
+    return {"zero": np.zeros(cells), "hotspot": hot,
+            "uniform": rng.uniform(0.0, 5.0, cells)}
+
+
+class TestTierParity:
+    @pytest.mark.parametrize("m,n", [(1, 1), (3, 5), (23, 17), (92, 92)])
+    @pytest.mark.parametrize("theta", [2.0, 12.0])
+    def test_multigrid_matches_jacobi(self, m, n, theta):
+        tc_mg = ThermalConfig(theta_ja=theta)
+        tc_ja = ThermalConfig(theta_ja=theta, **SEED_JACOBI)
+        for name, P in _power_maps(m * n).items():
+            Pj = jnp.asarray(P, jnp.float32)
+            T_mg = np.asarray(thermal.solve(Pj, m, n, 25.0, tc_mg))
+            T_ja = np.asarray(thermal.solve(Pj, m, n, 25.0, tc_ja))
+            np.testing.assert_allclose(T_mg, T_ja, atol=PARITY_ATOL,
+                                       err_msg=f"{m}x{n} {name}")
+
+    def test_256x256_energy_balance(self):
+        """Full-scale grid: the chunked-Jacobi reference is too slow here,
+        so pin the exact conservation law instead — all heat exits through
+        G_v, so the mean rise must equal theta_JA * P_total."""
+        m = 256
+        tc = ThermalConfig(theta_ja=2.0)
+        rng = np.random.default_rng(5)
+        P = jnp.asarray(rng.uniform(0.0, 1.0, (m * m,)), jnp.float32)
+        T = np.asarray(thermal.solve(P, m, m, 25.0, tc))
+        rise = float(T.mean() - 25.0)
+        expect = 2.0 * float(np.asarray(P).sum()) * 1e-3
+        assert rise == pytest.approx(expect, rel=1e-3)
+
+    def test_chunked_jacobi_matches_seed_loop(self):
+        """check_every=K stops within K sweeps of the seed criterion."""
+        m = 23
+        tc1 = ThermalConfig(theta_ja=12.0, **SEED_JACOBI)
+        tcK = ThermalConfig(theta_ja=12.0, solver="jacobi", check_every=32)
+        P = jnp.asarray(_power_maps(m * m)["uniform"], jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(thermal.solve(P, m, m, 25.0, tc1)),
+            np.asarray(thermal.solve(P, m, m, 25.0, tcK)), atol=1e-3)
+
+    def test_pod_config_parity(self):
+        """The TPU-fleet thermal config (spreading=2, tol=1e-4) converges
+        to the same field through both tiers."""
+        tcp = TF.pod_thermal_config(0.20, 256)
+        assert tcp.solver == "multigrid"
+        tcj = ThermalConfig(theta_ja=tcp.theta_ja, spreading=tcp.spreading,
+                            tol=tcp.tol, max_iters=tcp.max_iters,
+                            **SEED_JACOBI)
+        rng = np.random.default_rng(7)
+        P = jnp.asarray(rng.uniform(0, 300, (256,)) * 1e3, jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(thermal.solve(P, 16, 16, 25.0, tcp)),
+            np.asarray(thermal.solve(P, 16, 16, 25.0, tcj)),
+            atol=PARITY_ATOL)
+
+    def test_unknown_solver_raises(self):
+        with pytest.raises(ValueError):
+            thermal.solve(jnp.zeros((4,)), 2, 2, 25.0,
+                          ThermalConfig(solver="warp"))
+
+
+class TestWarmStart:
+    @settings(max_examples=8, deadline=None)
+    @given(offset=st.floats(-30.0, 60.0))
+    def test_converged_field_invariant_to_T0(self, offset):
+        """Property: the steady state does not depend on the warm start."""
+        m = 23
+        tc = ThermalConfig(theta_ja=12.0)
+        P = jnp.asarray(_power_maps(m * m)["uniform"], jnp.float32)
+        T_default = np.asarray(thermal.solve(P, m, m, 25.0, tc))
+        T0 = jnp.full((m * m,), 25.0 + offset, jnp.float32)
+        T_warm = np.asarray(thermal.solve(P, m, m, 25.0, tc, T0))
+        np.testing.assert_allclose(T_warm, T_default, atol=5e-3)
+
+    def test_warm_start_from_converged_is_noop_fast_path(self):
+        """Restarting from the converged field returns it unchanged (the
+        0-cycle path: the initial residual is already under tol)."""
+        m = 16
+        tc = ThermalConfig(theta_ja=2.0)
+        P = jnp.asarray(_power_maps(m * m)["hotspot"], jnp.float32)
+        T1 = thermal.solve(P, m, m, 25.0, tc)
+        T2 = thermal.solve(P, m, m, 25.0, tc, T1)
+        np.testing.assert_array_equal(np.asarray(T1), np.asarray(T2))
+
+    def test_accepts_2d_T0(self):
+        m, n = 5, 7
+        tc = ThermalConfig(theta_ja=2.0)
+        P = jnp.zeros((m * n,))
+        T0 = jnp.full((m, n), 40.0)
+        T = thermal.solve(P, m, n, 25.0, tc, T0)
+        np.testing.assert_allclose(np.asarray(T), 25.0, atol=1e-3)
+
+
+class TestBackendDispatch:
+    @pytest.mark.parametrize("m,n", [(8, 8), (23, 17)])
+    def test_pallas_smoother_matches_jnp(self, m, n):
+        """backend="pallas" routes the RB smoother through the fused
+        Pallas kernel (interpreter off-TPU) — same steady state."""
+        tc_j = ThermalConfig(theta_ja=12.0, backend="jnp")
+        tc_p = ThermalConfig(theta_ja=12.0, backend="pallas")
+        P = jnp.asarray(_power_maps(m * n)["uniform"], jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(thermal.solve(P, m, n, 25.0, tc_j)),
+            np.asarray(thermal.solve(P, m, n, 25.0, tc_p)), atol=1e-3)
+
+    def test_auto_backend_is_jnp_off_tpu(self):
+        assert thermal._use_pallas(ThermalConfig()) == (
+            jax.default_backend() == "tpu")
+        assert not thermal._use_pallas(ThermalConfig(backend="jnp"))
+        assert thermal._use_pallas(ThermalConfig(backend="pallas"))
+
+
+class TestRedBlackKernel:
+    @pytest.mark.parametrize("m,n", [(8, 8), (16, 32), (92, 92)])
+    @pytest.mark.parametrize("phase", [0, 1])
+    def test_rb_kernel_matches_ref(self, m, n, phase):
+        tc = ThermalConfig(theta_ja=12.0)
+        g_v, g_lat = thermal.conductances(m, n, tc)
+        rng = np.random.default_rng(11)
+        T0 = jnp.asarray(rng.uniform(25, 40, (m, n)), jnp.float32)
+        P = jnp.asarray(rng.uniform(0, 5e-3, (m, n)), jnp.float32)
+        diag = jnp.asarray(thermal._diag_np(np.full((m, n), g_v), g_lat))
+        out_k = ops.thermal_sweep(T0, P, diag, g_lat=g_lat,
+                                  g_v_tamb=g_v * 25.0, iters=5, phase=phase)
+        out_r = kref.thermal_stencil_ref(T0, P, diag, g_lat, g_v * 25.0, 5,
+                                         phase=phase)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_rb_sweep_differs_from_jacobi(self):
+        """The phases are genuinely sequential (black sees fresh red)."""
+        m = 8
+        tc = ThermalConfig(theta_ja=12.0)
+        g_v, g_lat = thermal.conductances(m, m, tc)
+        rng = np.random.default_rng(13)
+        T0 = jnp.asarray(rng.uniform(25, 40, (m, m)), jnp.float32)
+        P = jnp.asarray(rng.uniform(0, 5e-3, (m, m)), jnp.float32)
+        diag = jnp.asarray(thermal._diag_np(np.full((m, m), g_v), g_lat))
+        rb = ops.thermal_sweep(T0, P, diag, g_lat=g_lat, g_v_tamb=g_v * 25.0,
+                               iters=1, phase=0)
+        ja = ops.thermal_sweep(T0, P, diag, g_lat=g_lat, g_v_tamb=g_v * 25.0,
+                               iters=1, phase=None)
+        assert float(jnp.max(jnp.abs(rb - ja))) > 0
+
+
+class TestSolveBatchT0:
+    def test_vmapped_T0_equals_looped(self):
+        """The satellite pin: one vmapped T0 call == the per-element loop."""
+        prof = TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                            collective_s=0.2)
+        sub = pol.tpu_substrate(prof)
+        t = np.asarray([15.0, 25.0, 40.0], np.float32)
+        B, chips = len(t), sub.n_domains
+        envs = {"t_amb": jnp.asarray(t),
+                "util": jnp.ones((B, chips), jnp.float32),
+                "gamma": jnp.ones((B,), jnp.float32)}
+        batched = jax.vmap(sub.T0)(envs)
+        looped = jnp.stack([
+            sub.T0(jax.tree_util.tree_map(lambda x: x[b], envs))
+            for b in range(B)])
+        np.testing.assert_array_equal(np.asarray(batched),
+                                      np.asarray(looped))
