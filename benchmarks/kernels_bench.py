@@ -149,12 +149,47 @@ def closed_loop(quick: bool = True) -> Dict:
     out["serve_tokens_per_s"] = toks / dt
 
     # -- control-plane latencies --------------------------------------------
+    from repro.control.lut import sweep_points
     prof = TF.StepProfile.from_roofline(compute_s=0.7, memory_s=0.4,
                                         collective_s=0.15)
     rt = RT.EnergyAwareRuntime(prof, policy="power_save")
+    t_knots, u_knots = sweep_points(15.0, 40.0, 6), sweep_points(0.25, 1.0, 4)
     t0 = time.time()
-    controller = rt.controller(sweep=(15.0, 40.0, 6), guard_band_c=3.0)
-    out["lut_build_s"] = time.time() - t0  # one solve_batch over the sweep
+    controller = rt.controller(sweep=(15.0, 40.0, 6),
+                               util_sweep=(0.25, 1.0, 4), guard_band_c=3.0)
+    out["lut_build_s"] = time.time() - t0  # cold 2-D field incl. compiles
+
+    # warm 2-D RailField rebuild (the steady-state refresh cost): the whole
+    # ambient x utilization grid through the early-freeze batched solver,
+    # vs the lockstep path.  Best-of-3 so one GC pause / device-sync
+    # hiccup can't trip the 2x gate; the speedup ratio is REPORTED data,
+    # not a gated claim — at this 6x4 grid on CPU the compaction win and
+    # the segment-dispatch overhead roughly cancel (the win grows with
+    # batch size and convergence spread; the build stays ONE logical
+    # sweep either way)
+    def _best_of(fn, n=3):
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts) * 1e3
+
+    field = rt.planner.rail_field(t_knots, u_knots)  # warm the jits
+    out["railfield_build_ms"] = _best_of(
+        lambda: rt.planner.rail_field(t_knots, u_knots))
+    rt.planner.rail_field(t_knots, u_knots, early_freeze=False)  # compile
+    out["railfield_build_lockstep_ms"] = _best_of(
+        lambda: rt.planner.rail_field(t_knots, u_knots,
+                                      early_freeze=False))
+    out["railfield_build_speedup"] = (out["railfield_build_lockstep_ms"]
+                                      / out["railfield_build_ms"])
+    iters = 2000  # per-chip bilinear fast-path lookup
+    t0 = time.perf_counter()
+    for k in range(iters):
+        field.lookup(27.3 + 1e-4 * k, 0.77)
+    out["railfield_lookup_us"] = (time.perf_counter() - t0) / iters * 1e6
+
     amb = ctl.AmbientSensor(25.0)
     fleet = ctl.FleetActuator.from_runtime(rt)
     loop = ctl.ControlLoop(ctl.TelemetryBus([amb, fleet]), controller,
@@ -188,20 +223,30 @@ def closed_loop(quick: bool = True) -> Dict:
 REGRESSION_FACTOR = 2.0  # --check fails past this ratio (CI machine slack)
 
 
+def _gated(k: str) -> bool:
+    """jnp-path ``*_us`` entries plus the warm RailField build are gated;
+    interpret-mode and load-dependent latency entries are not."""
+    if k == "railfield_build_ms":  # warm device-call-bound: stable
+        return True
+    return k.endswith("_us") and "interpret" not in k
+
+
 def check_regressions(baseline: Dict, current: Dict,
                       factor: float = REGRESSION_FACTOR):
-    """Compare jnp-path ``*_us`` entries against the committed baseline.
+    """Compare gated entries against the committed baseline.
 
     Interpret-mode entries are structural (the CPU interpreter's wall time
     says nothing about TPU perf) and throughput/latency entries of the
     closed-loop benchmark are load-dependent; the stable regression signal
-    is the jnp-reference kernel + solver timings. Returns offending
+    is the jnp-reference kernel + solver timings, plus the warm RailField
+    build and fast-path lookup (``railfield_build_ms`` /
+    ``railfield_lookup_us``). Returns offending
     ``(key, baseline, current)`` rows and the baseline keys absent from
     the current results (a missing key would otherwise silently disable
     its gate — the caller must treat it as a failure)."""
     bad, missing = [], []
     for k in sorted(baseline):
-        if not k.endswith("_us") or "interpret" in k:
+        if not _gated(k):
             continue
         if k not in current:
             missing.append(k)
@@ -263,9 +308,8 @@ def main(argv=None) -> None:
                   f"baseline)")
         if bad or missing:
             sys.exit(1)
-        n = sum(1 for k in baseline
-                if k.endswith("_us") and "interpret" not in k)
-        print(f"[check] OK: {n} jnp-path *_us entries within "
+        n = sum(1 for k in baseline if _gated(k))
+        print(f"[check] OK: {n} gated entries within "
               f"{REGRESSION_FACTOR}x of {args.check}")
 
 

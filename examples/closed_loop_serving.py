@@ -1,18 +1,23 @@
-"""Closed-loop serving under a diurnal ambient sweep (repro.control).
+"""Closed-loop serving on the per-chip RailField (repro.control).
 
-The full telemetry -> controller -> actuator loop of DESIGN.md §3 around a
-live continuous-batching serve engine:
+The full telemetry -> controller -> actuator loop of DESIGN.md §3/§5 around
+a live continuous-batching serve engine:
 
 - requests trickle into the engine; every scheduler tick emits telemetry
-  (queue depth, active slots, tokens, tick wall time),
+  (queue depth, active slots / total slots -> the load fraction, tokens,
+  tick wall time),
 - an ``AmbientSensor`` replays a diurnal sine (18-32C) with a forced +12C
   jump two thirds through the day (a cooling failure / hot-aisle event),
-- the ``LutController`` answers quasi-static drift from the interpolated
-  §III-B LUT (built with ONE batched solve over the ambient sweep) and
-  falls back to the full Algorithm-1 fixed point on the jump,
-- a ``FleetActuator`` applies the rails to the simulated 16x16 pod and
-  re-solves the thermal field, closing the loop; the run report shows the
-  power saved vs nominal rails with t_max bounded all day.
+- a mid-day request burst swings the engine load — with the old scalar LUT
+  every swing past ``util_band`` forced a ``util_drift`` replan; the
+  ``RailField``'s utilization axis answers it from the table,
+- the ``LutController`` interpolates per-chip ``(v_core, v_sram)`` rails
+  bilinearly over (ambient, per-chip utilization) — ONE early-freeze
+  ``solve_batch`` built the whole 2-D grid — and falls back to the full
+  Algorithm-1 fixed point on the jump,
+- a ``FleetActuator`` applies the per-chip rails to the simulated 16x16
+  pod and re-solves the thermal field; an ``ElasticActuator`` stands by to
+  migrate work off any chip the controller condemns, closing the loop.
 
     PYTHONPATH=src python examples/closed_loop_serving.py
 """
@@ -25,12 +30,14 @@ from repro import control as ctl
 from repro.configs import registry
 from repro.core import runtime as RT
 from repro.core import tpu_fleet as TF
+from repro.ft.elastic import ElasticActuator, ElasticWorkAssignment
 from repro.models.model import Model
 from repro.serve.engine import Engine, Request
 
 TICKS = 120
 CONTROL_EVERY = 4  # engine ticks per control tick
 JUMP_AT = 80  # forced ambient jump (cooling failure), in engine ticks
+BURST_AT = range(40, 56)  # mid-day request burst (the load spike)
 
 
 def ambient(now: float) -> float:
@@ -53,18 +60,23 @@ def main():
                                         collective_s=0.15)
     rt = RT.EnergyAwareRuntime(prof, policy="power_save")
     t0 = time.time()
-    controller = rt.controller(sweep=(12.0, 42.0, 7), guard_band_c=3.0)
-    print(f"[lut] {controller.lut} built in {time.time() - t0:.2f}s "
-          f"(one solve_batch over the sweep)")
-    fleet = ctl.FleetActuator.from_runtime(rt)
+    controller = rt.controller(sweep=(12.0, 42.0, 7),
+                               util_sweep=(0.25, 1.0, 4),
+                               guard_band_c=3.0)
+    print(f"[field] {controller.field} built in {time.time() - t0:.2f}s "
+          f"(one early-freeze solve_batch over the 2-D sweep)")
+    elastic = ElasticActuator(ElasticWorkAssignment(rt.substrate.n_domains))
+    fleet = ctl.FleetActuator.from_runtime(rt, field=controller.field)
     loop = ctl.ControlLoop(
-        ctl.TelemetryBus([ctl.AmbientSensor(ambient), eng_src, fleet]),
-        controller, [fleet, ctl.EngineActuator(eng)])
+        ctl.TelemetryBus([ctl.AmbientSensor(ambient), eng_src, elastic,
+                          fleet]),
+        controller, [fleet, elastic, ctl.EngineActuator(eng)])
 
     # -- one simulated day ---------------------------------------------------
     rid, t_serve = 0, 0.0
     for tick in range(TICKS):
-        if tick % 6 == 0:  # request arrivals
+        burst = tick in BURST_AT
+        if tick % 6 == 0 or burst:  # arrivals (burst: every tick)
             eng.submit(Request(rid, np.arange(4 + rid % 5) % cfg.vocab_size,
                                max_new=8))
             rid += 1
@@ -78,10 +90,13 @@ def main():
             r = rep.readout
             marker = " <- FULL REPLAN" if rails.source == "solver" else ""
             if tick % 16 == 0 or rails.source == "solver":
+                vc = np.atleast_1d(np.asarray(rails.v_core))
                 print(f"tick {tick:3d}: amb={rep.snapshot.t_amb:5.1f}C "
+                      f"load={rep.snapshot.load or 0.0:4.2f} "
                       f"queue={rep.snapshot.queued} "
-                      f"active={rep.snapshot.active} "
-                      f"rails[{rails.source}] save={r.saving*100:5.1f}% "
+                      f"rails[{rails.source}] "
+                      f"vc=[{vc.min():.3f},{vc.max():.3f}] "
+                      f"save={r.saving*100:5.1f}% "
                       f"t_max={r.t_max:5.1f}C{marker}")
     eng.run(max_ticks=64)  # drain the tail of the queue
 
@@ -105,7 +120,10 @@ def main():
     assert t_max < TF.T_MAX_CHIP, "junction limit violated"
     assert st.lut_hits > st.replans, "fast path did not dominate"
     assert st.replans >= 2, "the ambient jump should force a replan"
-    print("OK: fast path dominated, jump forced a replan, margin -> power.")
+    assert not any(r.startswith("util") for r in st.replan_reasons), \
+        "load swings must ride the utilization axis, not replan"
+    print("OK: fast path served ambient drift AND the load burst; "
+          "the jump forced a replan; margin -> power.")
 
 
 if __name__ == "__main__":

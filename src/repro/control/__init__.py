@@ -29,27 +29,28 @@ from repro.control.controller import (Action, BoostRail, Controller,
                                       ControllerStats, LutController,
                                       Rebalance, SetRails, Throttle)
 from repro.control.loop import ControlLoop, LoopReport
-from repro.control.lut import DynamicLut, sweep_points
+from repro.control.lut import (DEFAULT_UTIL_KNOTS, DynamicLut, RailField,
+                               sweep_points)
 from repro.control.planner import FleetPlanner, PlanOut
 from repro.control.telemetry import (AmbientSample, AmbientSensor,
                                      ChipTempSample, EngineTelemetry,
                                      HeartbeatSample, MonitorTelemetry,
                                      Snapshot, StepSample, StragglerSample,
                                      TelemetryBus, TelemetrySource,
-                                     TickSample)
+                                     TickSample, UtilSample)
 
 __all__ = [
     # telemetry
     "TelemetrySource", "TelemetryBus", "Snapshot",
     "AmbientSensor", "EngineTelemetry", "MonitorTelemetry",
     "AmbientSample", "ChipTempSample", "StepSample", "TickSample",
-    "StragglerSample", "HeartbeatSample",
+    "UtilSample", "StragglerSample", "HeartbeatSample",
     # decisions
     "Controller", "LutController", "ControllerStats",
     "Action", "SetRails", "BoostRail", "Rebalance", "Throttle",
     # actuation
     "Actuator", "FleetActuator", "EngineActuator", "FleetReadout",
     # planning + loop
-    "FleetPlanner", "PlanOut", "DynamicLut", "sweep_points",
-    "ControlLoop", "LoopReport",
+    "FleetPlanner", "PlanOut", "DynamicLut", "RailField", "sweep_points",
+    "DEFAULT_UTIL_KNOTS", "ControlLoop", "LoopReport",
 ]

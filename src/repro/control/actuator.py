@@ -55,62 +55,78 @@ class FleetActuator:
     """
 
     def __init__(self, substrate, prof: TF.StepProfile, lib: TF.TpuLibrary,
-                 t_amb: float = 25.0, planner=None):
+                 t_amb: float = 25.0, planner=None, field=None):
         self.substrate = substrate
         self.prof = prof
         self.lib = lib
         self.planner = planner  # shares the cached nominal-baseline solve
+        self.field = field  # RailField with a baseline grid: interpolated
+        # nominal reference (used before the exact planner solve when set)
         chips = substrate.n_domains
         self.v_core = np.full(chips, TF.V_CORE_NOM, np.float32)
         self.v_sram = np.full(chips, TF.V_SRAM_NOM, np.float32)
-        self.boosted = set()  # chips pinned to nominal (straggler boost)
+        self.boosted = set()  # chips pinned to boost rails (stragglers)
+        self._boost_rails = {}  # chip -> (v_core, v_sram) boost override
         self.rebalance_log: List[Rebalance] = []
         self.T = np.asarray(substrate.T0({"t_amb": t_amb}))
         self.readout: Optional[FleetReadout] = None
         self._nominal_cache = {}
 
     @classmethod
-    def from_runtime(cls, rt, t_amb: Optional[float] = None):
+    def from_runtime(cls, rt, t_amb: Optional[float] = None, field=None):
         """Build over an ``EnergyAwareRuntime``'s substrate/profile/lib."""
         return cls(rt.substrate, rt.prof, rt.lib,
                    t_amb=rt.t_amb if t_amb is None else t_amb,
-                   planner=rt.planner)
+                   planner=rt.planner, field=field)
 
     # ------------------------------------------------------------------
     def apply(self, action: Action) -> bool:
         if isinstance(action, SetRails):
+            # scalar (legacy pod-uniform LUT) or per-chip (RailField /
+            # solver plan) rail vectors land the same way
             self.v_core = np.broadcast_to(
                 np.asarray(action.v_core, np.float32),
                 self.v_core.shape).copy()
             self.v_sram = np.broadcast_to(
                 np.asarray(action.v_sram, np.float32),
                 self.v_sram.shape).copy()
-            for c in self.boosted:  # boosts survive LUT/plan rewrites
-                self.v_core[c] = TF.V_CORE_NOM
-                self.v_sram[c] = TF.V_SRAM_NOM
+            for c in self.boosted:  # boosts survive field/plan rewrites
+                bc, bs = self._boost_rails.get(c,
+                                               (TF.V_CORE_NOM, TF.V_SRAM_NOM))
+                self.v_core[c] = bc  # each chip keeps ITS boost rails, not
+                self.v_sram[c] = bs  # a pod-wide nominal pin
             return True
         if isinstance(action, BoostRail):
             self.boosted.add(action.chip)
+            self._boost_rails[action.chip] = (action.v_core, action.v_sram)
             self.v_core[action.chip] = action.v_core
             self.v_sram[action.chip] = action.v_sram
             return True
         if isinstance(action, Rebalance):
             self.rebalance_log.append(action)
             self.boosted.discard(action.chip)
+            self._boost_rails.pop(action.chip, None)
             return True
         return False
 
     def release_boost(self, chip: int) -> None:
         self.boosted.discard(chip)
+        self._boost_rails.pop(chip, None)
 
     # ------------------------------------------------------------------
     def settle(self, snap: Snapshot,
                util: Optional[np.ndarray] = None) -> FleetReadout:
         """Evaluate power and the steady-state thermal field at the applied
         rails under the sensed ambient (two power<->thermal sweeps from the
-        previous field — the quasi-static readout between control ticks)."""
+        previous field — the quasi-static readout between control ticks).
+
+        ``util`` defaults to the snapshot's own estimate (engine load x
+        elastic shares) so the readout reflects the load the rails were
+        chosen for; a snapshot without either signal settles at ones."""
         t_amb = snap.t_amb if snap.t_amb is not None else 25.0
         chips = self.substrate.n_domains
+        if util is None:
+            util = snap.util(chips)
         us = np.asarray(util if util is not None else np.ones(chips),
                         np.float32)
         m, n = self.substrate.grid
@@ -132,6 +148,18 @@ class FleetActuator:
         return self.readout
 
     def _nominal_power(self, t_amb: float, us: np.ndarray) -> float:
+        if (self.field is not None
+                and float(np.min(us)) >= self.field.u_min
+                and self.field.covers_util(us)):
+            # interpolated per-chip nominal baseline from the RailField's
+            # solved grid — no per-tick nominal fixed point.  Only inside
+            # the solved utilization axis: clamping would misreport the
+            # reference (e.g. a 0.1-load tick read against the 0.25 slice
+            # inflates the saving ~2.5x), so out-of-axis loads fall back
+            # to the exact solve below
+            p = self.field.nominal_power(t_amb, us)
+            if p is not None:
+                return float(np.sum(p))
         if self.planner is not None:
             # one definition of "nominal" per environment across the plane:
             # the planner's cached nominal-only fixed point (PlanOut's

@@ -6,18 +6,27 @@ dataclasses; every actuator applies the ones it understands and ignores the
 rest, so one decision can fan out to the fleet (rails) and the serve engine
 (admission) simultaneously.
 
-:class:`LutController` is the paper's §III-B online scheme:
+:class:`LutController` is the paper's §III-B online scheme, upgraded to the
+per-chip two-axis fast path:
 
-- **fast path** — the sensed ambient is answered from the interpolating
-  :class:`~repro.control.lut.DynamicLut` (O(log K), no solver).  This is
-  the steady-state path: quasi-static ambient drift rides the LUT.
+- **fast path** — the sensed ``(t_amb, util)`` pair is answered from the
+  bilinear per-chip :class:`~repro.control.lut.RailField` (no solver):
+  quasi-static ambient drift AND load swings both ride the table, and
+  every chip gets the solver's spatial rail gradient.  When constructed
+  with an explicit scalar :class:`~repro.control.lut.DynamicLut` the
+  legacy pod-median ambient-only path is preserved unchanged.
 - **slow path** — a full :class:`repro.policy.Solver` fixed point
   (via :class:`~repro.control.planner.FleetPlanner`) when the fast path
   can no longer be trusted: an ambient *jump* beyond ``guard_band_c``
-  between ticks (the LUT is calibrated for quasi-static drift), a sensed
-  ambient outside the solved sweep, utilization drift beyond
-  ``util_band``, or chip temperature within ``t_headroom_c`` of the rated
-  junction limit.
+  between ticks (the table is calibrated for quasi-static drift), a
+  sensed ambient outside the solved sweep, utilization beyond the solved
+  utilization axis (+ ``util_band``; *below* the axis the clamp is
+  conservative and stays fast — scalar-LUT mode keeps the legacy
+  ``util_drift`` trigger instead), or chip temperature within
+  ``t_headroom_c`` of the rated junction limit.  The guard band is
+  enforced per chip: the RailField's trust contract (interp within one
+  10 mV rail step of the full fixed point) is pinned chip-wise, and the
+  thermal triggers act on the per-chip temperature field.
 - **straggler policy** — flagged stragglers route through
   ``FleetPlanner.mitigate``: rail-boost while nominal rails can still hold
   the clock at the chip's temperature, rebalance otherwise.
@@ -33,7 +42,8 @@ from typing import Dict, List, Optional, Protocol, Union, runtime_checkable
 import numpy as np
 
 from repro.core import tpu_fleet as TF
-from repro.control.lut import DynamicLut, sweep_points
+from repro.control.lut import (DEFAULT_UTIL_KNOTS, DynamicLut, RailField,
+                               sweep_points)
 from repro.control.planner import FleetPlanner, PlanOut
 from repro.control.telemetry import Snapshot
 
@@ -99,23 +109,38 @@ class ControllerStats:
 
 
 class LutController:
-    """Batched-LUT fast path with a guard-banded full-solver fallback."""
+    """Batched-table fast path with a guard-banded full-solver fallback.
+
+    The default fast path is a per-chip 2-axis :class:`RailField` (built by
+    one early-freeze ``solve_batch`` over the ``sweep x util_sweep`` grid).
+    Passing an explicit scalar ``lut=DynamicLut(...)`` selects the legacy
+    pod-median ambient-only behavior (the pre-RailField controller,
+    preserved as a facade and used as the comparison baseline by
+    ``repro.scenarios``).
+    """
 
     DEFAULT_SWEEP = (10.0, 45.0, 8)  # (lo degC, hi degC, knots)
 
     def __init__(self, planner: FleetPlanner,
                  lut: Optional[DynamicLut] = None,
+                 field: Optional[RailField] = None,
                  sweep=None,
+                 util_sweep=None,
                  guard_band_c: float = 2.0,
                  util_band: float = 0.25,
                  t_headroom_c: float = 5.0,
                  throttle_cap: int = 1):
         self.planner = planner
-        if lut is None:
+        if field is None and lut is None:
             lo, hi, n = sweep if sweep is not None else self.DEFAULT_SWEEP
-            # ONE solve_batch call covers the whole ambient sweep
-            lut = planner.build_lut(sweep_points(lo, hi, n))
-        self.lut = lut
+            u_knots = (sweep_points(*util_sweep)
+                       if util_sweep is not None else DEFAULT_UTIL_KNOTS)
+            # ONE early-freeze solve_batch covers the whole 2-D sweep grid
+            field = planner.rail_field(sweep_points(lo, hi, n), u_knots)
+        self.field = field
+        # the scalar facade: explicit legacy mode, or the field's pod-median
+        # reduction (kept for introspection / repr / legacy callers)
+        self.lut = lut if lut is not None else field.median_lut()
         self.guard_band_c = guard_band_c
         self.util_band = util_band
         self.t_headroom_c = t_headroom_c
@@ -128,6 +153,20 @@ class LutController:
         self._throttled = False
 
     # ------------------------------------------------------------------
+    def reset(self) -> None:
+        """Forget the online state (the field/luts and compiled solvers
+        stay warm): the next tick is a cold start.  Scenario replays call
+        this so a reused controller starts every replayed day from the
+        same state — stats are NOT cleared (they are cumulative; replays
+        report deltas)."""
+        self.plan = None
+        self._t_prev = None
+        self._util_planned = None
+        self._T_warm = None
+        self._throttled = False
+        self.planner.T_last = None  # first replan restarts deterministic
+
+    # ------------------------------------------------------------------
     def _replan_reason(self, snap: Snapshot,
                        util: Optional[np.ndarray]) -> Optional[str]:
         t = snap.t_amb
@@ -135,13 +174,21 @@ class LutController:
             return "cold_start"
         if abs(t - self._t_prev) > self.guard_band_c:
             return f"ambient_jump({t - self._t_prev:+.1f}C)"
-        if not self.lut.covers(t, margin=self.guard_band_c):
+        table = self.field if self.field is not None else self.lut
+        if not table.covers(t, margin=self.guard_band_c):
             return f"lut_range({t:.1f}C)"
         if util is not None:
-            ref = (self._util_planned if self._util_planned is not None
-                   else np.ones_like(util))
-            if float(np.max(np.abs(util - ref))) > self.util_band:
-                return "util_drift"
+            if self.field is not None:
+                # load swings ride the utilization axis; only an excursion
+                # PAST the solved axis (where the clamp would under-volt
+                # nothing and under-protect everything) forces the solver
+                if not self.field.covers_util(util, margin=self.util_band):
+                    return f"util_range({float(np.max(util)):.2f})"
+            else:
+                ref = (self._util_planned if self._util_planned is not None
+                       else np.ones_like(util))
+                if float(np.max(np.abs(util - ref))) > self.util_band:
+                    return "util_drift"
         if (snap.t_max is not None
                 and snap.t_max > TF.T_MAX_CHIP - self.t_headroom_c):
             return f"thermal_emergency({snap.t_max:.1f}C)"
@@ -151,6 +198,10 @@ class LutController:
                util: Optional[np.ndarray] = None) -> List[Action]:
         if snap.t_amb is None:
             return []  # nothing sensed yet
+        if util is None:
+            # serve-engine load x elastic work shares, when telemetry
+            # carries them (None otherwise: the legacy ambient-only tick)
+            util = snap.util(self.planner.substrate.n_domains)
         actions: List[Action] = []
         reason = self._replan_reason(snap, util)
         if reason is not None:
@@ -164,7 +215,10 @@ class LutController:
             actions.append(SetRails(plan.v_core, plan.v_sram,
                                     source="solver", plan=plan))
         else:
-            vc, vs = self.lut.lookup(snap.t_amb)
+            if self.field is not None:
+                vc, vs = self.field.lookup(snap.t_amb, util)
+            else:
+                vc, vs = self.lut.lookup(snap.t_amb)
             self.stats.lut_hits += 1
             actions.append(SetRails(vc, vs, source="lut"))
         self._t_prev = snap.t_amb
@@ -175,6 +229,10 @@ class LutController:
             if not 0 <= s.chip < chips:  # unmappable worker name: no chip
                 self.stats.unmapped += 1  # to boost — surface, don't crash
                 continue
+            if (snap.shares is not None and s.chip < len(snap.shares)
+                    and snap.shares[s.chip] <= 0.0):
+                continue  # work already migrated off (condemned): a boost
+                # would burn power on a draining chip
             T_chip = (float(snap.t_chip[s.chip]) if snap.t_chip is not None
                       else (self.plan.t_max if self.plan else 60.0))
             ref = self.plan or _nominal_plan(self.planner)

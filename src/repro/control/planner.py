@@ -17,6 +17,12 @@ it directly):
 - :meth:`lut` / :meth:`build_lut` — the §III-B dynamic scheme: replans for
   *many* ambient environments go through ONE ``solve_batch`` device call;
   ``build_lut`` wraps the result in an interpolating :class:`DynamicLut`.
+- :meth:`rail_field` — the 2-axis per-chip fast
+  path: ONE ``solve_batch`` (early-freeze) call over the whole
+  ``ambient x utilization`` knot grid, plus one batched nominal-only solve
+  producing the per-chip baseline on the same grid (prefilled into the
+  nominal-baseline cache, carried on the :class:`RailField` for
+  interpolated readouts).
 - :meth:`mitigate` — straggler rail-boost-or-rebalance as a pure decision
   (the controller turns it into an actuator command).
 """
@@ -30,7 +36,7 @@ import numpy as np
 
 from repro import policy as pol
 from repro.core import tpu_fleet as TF
-from repro.control.lut import DynamicLut
+from repro.control.lut import DEFAULT_UTIL_KNOTS, DynamicLut, RailField
 
 
 @dataclass
@@ -182,8 +188,86 @@ class FleetPlanner:
 
     def build_lut(self, t_ambs,
                   util: Optional[np.ndarray] = None) -> DynamicLut:
-        """The interpolating lookup the controller fast path runs on."""
+        """The interpolating scalar lookup (legacy pod-median fast path)."""
         return DynamicLut(self.lut(t_ambs, util))
+
+    # ------------------------------------------------------------------
+    def _grid_envs(self, t_ambs, u_levels) -> Dict:
+        """The flattened ``K_t x K_u`` environment batch (row-major: the
+        utilization axis varies fastest)."""
+        chips = self.substrate.n_domains
+        t = np.asarray([float(x) for x in t_ambs], np.float32)
+        u = np.asarray([float(x) for x in u_levels], np.float32)
+        B = t.size * u.size
+        tt = np.repeat(t, u.size)  # (B,)
+        uu = np.tile(u, t.size)    # (B,)
+        return {
+            "t_amb": tt,
+            "util": uu[:, None] * np.ones((1, chips), np.float32),
+            "gamma": np.full((B,), self.policy.gamma, np.float32),
+        }
+
+    def rail_field(self, t_ambs, u_levels=DEFAULT_UTIL_KNOTS,
+                   with_baseline: bool = True,
+                   early_freeze: bool = True) -> RailField:
+        """Solve the per-chip 2-axis rail table: ONE batched fixed point
+        over the whole ``ambient x utilization`` grid.
+
+        ``early_freeze`` lets converged grid points stop iterating instead
+        of riding lockstep with the slowest corner of the grid (the hot,
+        fully-utilized one) — rail decisions bitwise-identical to the
+        lockstep path, fewer wasted search+thermal passes.
+        ``with_baseline`` additionally runs one
+        batched *nominal-only* solve over the same grid, prefilling the
+        per-environment baseline cache and attaching the per-chip nominal
+        power to the field for interpolated readouts.
+        """
+        t = [float(x) for x in t_ambs]
+        u = [float(x) for x in u_levels]
+        Kt, Ku = len(t), len(u)
+        chips = self.substrate.n_domains
+        envs = self._grid_envs(t, u)
+        solver = pol.cached_solver(self.substrate, self.policy,
+                                   self.delta_t, self.max_iters)
+        sol = solver.solve_batch(envs, early_freeze=early_freeze)
+        vc, vs = self.substrate.decode(sol.idx)  # (B, chips)
+        p_nom = None
+        if with_baseline:
+            p_nom = self._baseline_grid(envs, (Kt, Ku, chips), early_freeze,
+                                        t, u)
+        return RailField(t, u,
+                         np.asarray(vc).reshape(Kt, Ku, chips),
+                         np.asarray(vs).reshape(Kt, Ku, chips),
+                         p_nom=p_nom)
+
+    def _baseline_grid(self, envs: Dict, shape, early_freeze: bool,
+                       t_knots, u_levels) -> np.ndarray:
+        """Per-chip nominal-baseline power over the sweep grid — one
+        batched nominal-only solve, prefilled into the per-environment
+        cache so a replan/readout AT a grid knot never re-solves it.
+
+        Cache keys are built from the ORIGINAL python-float knots:
+        ``baseline_power`` keys on the caller's float64 ambient, so keying
+        on the float32 env batch would miss even exact-knot queries."""
+        bsolver = pol.cached_solver(self.substrate.nominal_only(),
+                                    pol.PowerSave(), self.delta_t,
+                                    self.max_iters)
+        bsol = bsolver.solve_batch(envs, early_freeze=early_freeze)
+        pb = np.asarray(bsol.power)  # (B, chips); legacy last-search power
+        # warm the SINGLE-env nominal fixed point too: the prefilled cache
+        # serves grid-knot ambients, so without this the first *off-knot*
+        # control tick would pay this jit compile (~0.7 s) inside the
+        # online loop instead of here at build time
+        bsolver.solve({k: v[0] for k, v in envs.items()})
+        for i in range(pb.shape[0]):
+            key = (float(t_knots[i // len(u_levels)]),
+                   np.asarray(envs["util"][i], np.float32).tobytes(),
+                   float(self.delta_t), int(self.max_iters))
+            if key not in self._baseline:
+                self._baseline[key] = pb[i]
+                if len(self._baseline) > _BASELINE_CACHE_LIMIT:
+                    self._baseline.popitem(last=False)
+        return pb.reshape(shape)
 
     # ------------------------------------------------------------------
     def mitigate(self, plan: PlanOut, chip: int, T_chip: float) -> Dict:

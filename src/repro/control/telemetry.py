@@ -56,13 +56,24 @@ class StepSample:
 
 @dataclass(frozen=True)
 class TickSample:
-    """One serve-engine scheduler tick."""
+    """One serve-engine scheduler tick.  ``slots`` (total cache slots) lets
+    the snapshot derive a load fraction — the utilization axis of the
+    RailField fast path; 0 means the producer predates the field."""
     tick: int
     queued: int
     active: int
     finished: int
     tokens: int
     tick_s: float
+    slots: int = 0
+
+
+@dataclass(frozen=True)
+class UtilSample:
+    """Per-chip work shares (1.0 = one chip's fair share; a condemned chip
+    reports 0).  Produced by ``ft.elastic.ElasticActuator`` after
+    ``Rebalance`` actions migrate work."""
+    shares: np.ndarray  # (chips,)
 
 
 @dataclass(frozen=True)
@@ -80,7 +91,7 @@ class HeartbeatSample:
 
 
 Sample = Union[AmbientSample, ChipTempSample, StepSample, TickSample,
-               StragglerSample, HeartbeatSample]
+               UtilSample, StragglerSample, HeartbeatSample]
 
 
 # ---------------------------------------------------------------------------
@@ -109,12 +120,38 @@ class Snapshot:
     active: int = 0
     tokens: int = 0
     tick_s: Optional[float] = None
+    slots: int = 0
+    shares: Optional[np.ndarray] = None  # elastic per-chip work shares
     stragglers: List[StragglerSample] = field(default_factory=list)
     dead: FrozenSet[str] = frozenset()
+
+    # an idle pod still clocks (host traffic, refresh, collective keepalive):
+    # the sensed load never folds below this floor
+    LOAD_FLOOR = 0.1
 
     @property
     def t_max(self) -> Optional[float]:
         return None if self.t_chip is None else float(np.max(self.t_chip))
+
+    @property
+    def load(self) -> Optional[float]:
+        """Serve-engine load fraction (active slots / total), floored at
+        :data:`LOAD_FLOOR`; None before any slot-aware tick arrived."""
+        if self.slots <= 0:
+            return None
+        return max(self.active / self.slots, self.LOAD_FLOOR)
+
+    def util(self, chips: int) -> Optional[np.ndarray]:
+        """Per-chip utilization estimate for the RailField's second axis:
+        elastic work shares scaled by the engine load fraction.  None when
+        neither signal has been sensed (legacy ambient-only ticks)."""
+        if self.shares is None and self.load is None:
+            return None
+        shares = (np.asarray(self.shares, np.float32)
+                  if self.shares is not None
+                  else np.ones(chips, np.float32))
+        return (shares * (1.0 if self.load is None else self.load)
+                ).astype(np.float32)
 
 
 class TelemetryBus:
@@ -149,6 +186,10 @@ class TelemetryBus:
                     s.queued, s.active = smp.queued, smp.active
                     s.tokens += smp.tokens
                     s.tick_s = smp.tick_s
+                    if smp.slots:
+                        s.slots = smp.slots
+                elif isinstance(smp, UtilSample):
+                    s.shares = np.asarray(smp.shares, np.float32)
                 elif isinstance(smp, StragglerSample):
                     s.stragglers.append(smp)
                 elif isinstance(smp, HeartbeatSample):
@@ -156,7 +197,8 @@ class TelemetryBus:
         # hand the controller a stable copy; persistent state keeps arrays
         return Snapshot(now=s.now, t_amb=s.t_amb, t_chip=s.t_chip,
                         step_s=s.step_s, queued=s.queued, active=s.active,
-                        tokens=s.tokens, tick_s=s.tick_s,
+                        tokens=s.tokens, tick_s=s.tick_s, slots=s.slots,
+                        shares=s.shares,
                         stragglers=list(s.stragglers), dead=s.dead)
 
 
@@ -200,12 +242,24 @@ def _default_chip_of(worker: str) -> int:
 class MonitorTelemetry:
     """Drains ``StragglerDetector.events`` (exactly once each) and reports
     the ``Heartbeat`` dead-set; ``chip_of`` maps worker names to the chip
-    index the actuator can boost (default: trailing digits)."""
+    index the actuator can boost.
+
+    Pass ``topology`` (a :class:`repro.launch.mesh.PodTopology`) for the
+    real rank -> pod-coordinate mapping with validation: non-numeric worker
+    names and ranks beyond the pod map to ``-1`` (the controller counts
+    them as ``unmapped`` instead of boosting a phantom chip 0 / crashing on
+    an out-of-range index).  The bare trailing-digit parser remains the
+    legacy default when neither ``topology`` nor ``chip_of`` is given.
+    """
 
     def __init__(self, detector, heartbeat=None,
-                 chip_of: Callable[[str], int] = _default_chip_of):
+                 chip_of: Optional[Callable[[str], int]] = None,
+                 topology=None):
         self.detector = detector
         self.heartbeat = heartbeat
+        if chip_of is None:
+            chip_of = (topology.chip_of if topology is not None
+                       else _default_chip_of)
         self.chip_of = chip_of
         self._seen = len(detector.events)
 

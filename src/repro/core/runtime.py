@@ -91,11 +91,23 @@ class EnergyAwareRuntime:
         return self.planner.lut(t_ambs)
 
     def build_lut(self, t_ambs) -> DynamicLut:
-        """Interpolating (clamped) lookup over a solved ambient sweep."""
+        """Interpolating (clamped) scalar lookup over an ambient sweep."""
         return self.planner.build_lut(t_ambs)
 
+    def build_field(self, t_ambs, u_levels=None, **kw):
+        """Per-chip 2-axis (ambient x utilization) RailField — ONE
+        early-freeze ``solve_batch`` over the whole sweep grid."""
+        from repro.control.lut import DEFAULT_UTIL_KNOTS
+        if u_levels is None:
+            u_levels = DEFAULT_UTIL_KNOTS
+        return self.planner.rail_field(t_ambs, u_levels, **kw)
+
     def controller(self, **kw):
-        """A ``repro.control.LutController`` over this runtime's planner."""
+        """A ``repro.control.LutController`` over this runtime's planner.
+
+        By default this builds the per-chip RailField fast path; pass
+        ``lut=self.build_lut(...)`` for the legacy pod-median scalar
+        behavior."""
         from repro.control.controller import LutController
         return LutController(self.planner, **kw)
 

@@ -1,4 +1,5 @@
-"""Elastic scaling: rebuild mesh/plan on device-count change + reshard.
+"""Elastic scaling: rebuild mesh/plan on device-count change + reshard,
+and the control plane's work-migration actuation.
 
 Flow (exercised by tests on the CPU host mesh):
   1. a worker dies -> Heartbeat reports a smaller alive set
@@ -6,12 +7,25 @@ Flow (exercised by tests on the CPU host mesh):
   3. params/opt state are restored from the latest checkpoint with the NEW
      plan's shardings (CheckpointManager.restore is mesh-agnostic)
   4. the data pipeline continues from the restored step (deterministic skip)
+
+The ``repro.control`` tie-in: a controller that decides ``Rebalance(chip)``
+(rails alone cannot hold the clock) needs something to actually *move the
+work*.  :class:`ElasticWorkAssignment` is that something in simulation: a
+per-chip work-share vector that a condemn spreads over the healthy chips,
+and :class:`ElasticActuator` is the control-plane adapter — it applies
+``Rebalance`` actions to the assignment and feeds the resulting shares back
+as :class:`~repro.control.telemetry.UtilSample` telemetry, so the very next
+control tick plans rails for the *migrated* load (the condemned chip cools
+at ~zero utilization; its former share heats its neighbours).  On real
+hardware the same decision triggers :func:`rescale` onto the surviving
+device set; ``ElasticWorkAssignment.mesh_hint`` names that shape.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
@@ -47,3 +61,88 @@ def rescale(cfg: ModelConfig, ckpt_mgr, model_obj, n_devices: int,
     shardings = plan.param_shardings(meta)
     params, got_step = ckpt_mgr.restore(like, step=step, shardings=shardings)
     return mesh, plan, params, got_step
+
+
+# ===========================================================================
+# control-plane work migration (Rebalance actuation)
+# ===========================================================================
+
+
+class ElasticWorkAssignment:
+    """Per-chip work shares under condemn/restore.
+
+    ``shares`` starts at 1.0 everywhere (every chip carries its fair
+    share) and always sums to ``n_chips``: condemning a chip zeroes its
+    share and spreads it proportionally over the healthy chips, so total
+    work is conserved while the condemned chip drains.  ``util(load)``
+    scales the shares by the sensed pod load — exactly the per-chip
+    utilization vector the RailField's second axis interpolates.
+    """
+
+    def __init__(self, n_chips: int):
+        self.n = int(n_chips)
+        self.shares = np.ones(self.n, np.float32)
+        self.condemned: set = set()
+
+    def condemn(self, chip: int) -> np.ndarray:
+        """Migrate ``chip``'s share onto the healthy chips (no-op for an
+        already-condemned or out-of-range chip, or when it is the last
+        healthy chip — someone has to do the work)."""
+        if (not 0 <= chip < self.n or chip in self.condemned
+                or len(self.condemned) >= self.n - 1):
+            return self.shares
+        moved = float(self.shares[chip])
+        self.shares[chip] = 0.0
+        healthy = self.shares > 0
+        total = float(self.shares[healthy].sum())
+        if moved > 0 and total > 0:
+            self.shares[healthy] *= (total + moved) / total
+        self.condemned.add(chip)
+        return self.shares
+
+    def restore(self, chip: int) -> np.ndarray:
+        """Re-admit a repaired/cooled chip at the mean healthy share."""
+        if chip not in self.condemned:
+            return self.shares
+        self.condemned.discard(chip)
+        healthy = self.shares > 0
+        n_healthy = int(healthy.sum())
+        mean = float(self.shares[healthy].sum()) / max(n_healthy, 1)
+        self.shares[chip] = mean
+        self.shares *= self.n / float(self.shares.sum())
+        return self.shares
+
+    def util(self, load: float = 1.0) -> np.ndarray:
+        """Per-chip utilization at pod load fraction ``load``."""
+        return (self.shares * np.float32(load)).astype(np.float32)
+
+    def mesh_hint(self, prefer_model: int = 1) -> Tuple[int, int]:
+        """The (data, model) grid a real rescale would rebuild onto."""
+        return choose_mesh_shape(self.n - len(self.condemned), prefer_model)
+
+
+class ElasticActuator:
+    """Control-plane adapter: consumes ``Rebalance`` actions, produces
+    ``UtilSample`` telemetry.
+
+    Implements both control protocols — ``Actuator.apply`` (a ``Rebalance``
+    condemns the chip on the assignment) and ``TelemetrySource.poll`` (the
+    current shares ride back to the bus), closing the migration loop:
+    decide -> condemn -> shares -> next tick's utilization -> rails.
+    """
+
+    def __init__(self, assignment: ElasticWorkAssignment):
+        self.assignment = assignment
+        self.log: List = []
+
+    def apply(self, action) -> bool:
+        from repro.control.controller import Rebalance
+        if isinstance(action, Rebalance):
+            self.assignment.condemn(action.chip)
+            self.log.append(action)
+            return True
+        return False
+
+    def poll(self, now: float) -> List:
+        from repro.control.telemetry import UtilSample
+        return [UtilSample(self.assignment.shares.copy())]

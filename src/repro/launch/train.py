@@ -33,9 +33,10 @@ from repro.configs import registry
 from repro.core import runtime as energy_rt
 from repro.core import tpu_fleet as TF
 from repro.data.pipeline import DataConfig, make_iterator
+from repro.ft.elastic import ElasticActuator, ElasticWorkAssignment
 from repro.ft.monitor import (FailureInjector, StragglerDetector,
                               TransientError, retry_step)
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import PodTopology, make_host_mesh
 from repro.models import params as pm
 from repro.models.model import Model
 from repro.sharding.plan import make_plan
@@ -122,11 +123,20 @@ def main(argv=None):
         rt = energy_rt.EnergyAwareRuntime(
             prof, policy=pol.from_spec(args.energy_policy),
             t_amb=args.t_amb)
-        mon = ctl.MonitorTelemetry(straggler)
-        fleet = ctl.FleetActuator.from_runtime(rt)
+        # straggler workers resolve to pod coordinates through the mesh
+        # topology (out-of-pod ranks surface as unmapped, never chip 0),
+        # and Rebalance decisions actually migrate work via the elastic
+        # assignment, whose shares feed the RailField utilization axis
+        topo = PodTopology(grid=rt.substrate.grid)
+        mon = ctl.MonitorTelemetry(straggler, topology=topo)
+        elastic = ElasticActuator(ElasticWorkAssignment(
+            rt.substrate.n_domains))
+        controller = rt.controller()  # per-chip RailField fast path
+        fleet = ctl.FleetActuator.from_runtime(rt, field=controller.field)
         loop = ctl.ControlLoop(
-            ctl.TelemetryBus([ctl.AmbientSensor(args.t_amb), mon, fleet]),
-            rt.controller(), [fleet])
+            ctl.TelemetryBus([ctl.AmbientSensor(args.t_amb), mon, elastic,
+                              fleet]),
+            controller, [fleet, elastic])
 
     step = start_step
     t_train0 = time.time()

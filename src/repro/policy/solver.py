@@ -21,6 +21,20 @@ dynamic-scheme LUT or a gamma sweep is ONE compiled device call instead of N
 sequential ``run()``s.  Converged batch elements freeze (their state is
 re-selected) so batched results equal the sequential ones exactly.
 
+``solve_batch(..., early_freeze=True)`` goes one step further: instead of
+every element running lockstep until the slowest converges (frozen elements
+still pay the candidate search each iteration under vmap), the fixed point
+runs in short jitted *segments* and converged elements are compacted out of
+the batch between segments (padded to power-of-two buckets so the number of
+compiled shapes stays logarithmic).  The per-element iteration bodies are
+the same traced code, so every *decision* (chosen candidates, iteration
+counts, convergence flags, per-iteration choice history) is bit-identical
+to the lockstep path; the continuous thermal/power leaves agree to f32
+round-off (XLA picks a batch-shape-dependent summation order inside the
+vmapped solves — ~1e-4 degC on T, orders below ``delta_t`` and the 10 mV
+rail grid).  Pinned in ``tests/test_railfield.py``; the 2-D RailField
+sweep build uses this path.
+
 Per-iteration history (chosen candidate, total power, mean junction
 temperature) is recorded into fixed ``max_iters`` slots for the legacy trace
 dataclasses.
@@ -32,6 +46,7 @@ from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import thermal
 from repro.policy.policies import Policy
@@ -93,6 +108,8 @@ class Solver:
         self._jit_solve = jax.jit(self._fixed_point)
         self._jit_batch = jax.jit(jax.vmap(self._fixed_point,
                                            in_axes=(0, 0)))
+        self._jit_segments: Dict[int, Any] = {}  # seg -> vmapped segment
+        self._jit_finalize = None  # built lazily (early-freeze path only)
 
     # ------------------------------------------------------------------
     def _select(self, T, it, idx_prev, env):
@@ -114,37 +131,78 @@ class Solver:
         take = lambda a: jnp.take_along_axis(a, idx[:, None], -1)[:, 0]
         return idx, take(f), take(p), take(obj)
 
-    def _fixed_point(self, env: Env, T0) -> Solution:
+    def _body(self, env: Env, st: _State) -> _State:
+        """One fixed-point iteration (select -> thermal -> convergence)."""
         sub = self.substrate
         m, n = sub.grid
+        idx, f_sel, p_sel, obj_sel = self._select(st.T, st.it, st.idx, env)
+        sp = sub.site_power(st.T, idx, f_sel, env)
+        # warm-start the multigrid solve from the previous iteration's
+        # field: consecutive fixed-point iterates differ by at most a
+        # rail step's worth of heating, so late iterations converge in
+        # one or two V-cycles
+        T_new = thermal.solve(sp, m, n, env["t_amb"], sub.thermal_cfg,
+                              st.T)
+        dT = jnp.max(jnp.abs(T_new - st.T))
+        new = _State(
+            T=T_new, it=st.it + 1, idx=idx, f_sel=f_sel, p_sel=p_sel,
+            obj_sel=obj_sel, done=dT < self.delta_t,
+            idx_hist=st.idx_hist.at[st.it].set(idx),
+            p_hist=st.p_hist.at[st.it].set(jnp.sum(p_sel)),
+            tj_hist=st.tj_hist.at[st.it].set(jnp.mean(T_new)),
+        )
+        # under vmap the loop runs until ALL batch elements converge;
+        # freezing finished elements keeps batched == sequential
+        return jax.tree_util.tree_map(
+            lambda old, upd: jnp.where(st.done, old, upd), st, new)
+
+    def _init_np(self, B: int, T0: np.ndarray) -> _State:
+        """The batched start state as host arrays (the compaction loop
+        scatters segment results back into these in place)."""
+        I, D = self.max_iters, self.substrate.n_domains
+        return _State(
+            T=np.asarray(T0, np.float32).copy(),
+            it=np.zeros((B,), np.int32),
+            idx=np.full((B, D), self.substrate.nominal_idx, np.int32),
+            f_sel=np.zeros((B, D), np.float32),
+            p_sel=np.zeros((B, D), np.float32),
+            obj_sel=np.zeros((B, D), np.float32),
+            done=np.zeros((B,), bool),
+            idx_hist=np.zeros((B, I, D), np.int32),
+            p_hist=np.zeros((B, I), np.float32),
+            tj_hist=np.zeros((B, I), np.float32),
+        )
+
+    def _run_segment(self, env: Env, st: _State, seg: int) -> _State:
+        """Up to ``seg`` fixed-point iterations (stops early on done)."""
+        def body(c):
+            st, k = c
+            return self._body(env, st), k + 1
+
+        def cond(c):
+            st, k = c
+            return (~st.done) & (st.it < self.max_iters) & (k < seg)
+
+        st, _ = jax.lax.while_loop(cond, body, (st, jnp.int32(0)))
+        return st
+
+    def _finalize(self, env: Env, st: _State) -> Solution:
+        # re-evaluate the final choice at the converged temperature field
+        # (the legacy flows report baseline power / Algorithm-2 delay there)
+        sub = self.substrate
+        d_fin = sub.delay_at(st.T, st.idx, env)
+        f_fin = self.policy.frequency(sub, d_fin, env)
+        p_fin = sub.power_at(st.T, st.idx, f_fin, env)
+        return Solution(
+            idx=st.idx, f=st.f_sel, power=st.p_sel, obj=st.obj_sel, T=st.T,
+            n_iters=st.it, converged=st.done,
+            d_final=d_fin, f_final=f_fin, p_final=p_fin,
+            idx_hist=st.idx_hist, p_hist=st.p_hist, tj_hist=st.tj_hist,
+        )
+
+    def _fixed_point(self, env: Env, T0) -> Solution:
+        sub = self.substrate
         I, D = self.max_iters, sub.n_domains
-
-        def body(st: _State) -> _State:
-            idx, f_sel, p_sel, obj_sel = self._select(st.T, st.it, st.idx,
-                                                      env)
-            sp = sub.site_power(st.T, idx, f_sel, env)
-            # warm-start the multigrid solve from the previous iteration's
-            # field: consecutive fixed-point iterates differ by at most a
-            # rail step's worth of heating, so late iterations converge in
-            # one or two V-cycles
-            T_new = thermal.solve(sp, m, n, env["t_amb"], sub.thermal_cfg,
-                                  st.T)
-            dT = jnp.max(jnp.abs(T_new - st.T))
-            new = _State(
-                T=T_new, it=st.it + 1, idx=idx, f_sel=f_sel, p_sel=p_sel,
-                obj_sel=obj_sel, done=dT < self.delta_t,
-                idx_hist=st.idx_hist.at[st.it].set(idx),
-                p_hist=st.p_hist.at[st.it].set(jnp.sum(p_sel)),
-                tj_hist=st.tj_hist.at[st.it].set(jnp.mean(T_new)),
-            )
-            # under vmap the loop runs until ALL batch elements converge;
-            # freezing finished elements keeps batched == sequential
-            return jax.tree_util.tree_map(
-                lambda old, upd: jnp.where(st.done, old, upd), st, new)
-
-        def cond(st: _State):
-            return (~st.done) & (st.it < I)
-
         st0 = _State(
             T=jnp.asarray(T0, jnp.float32),
             it=jnp.int32(0),
@@ -157,20 +215,10 @@ class Solver:
             p_hist=jnp.zeros((I,), jnp.float32),
             tj_hist=jnp.zeros((I,), jnp.float32),
         )
-        st = jax.lax.while_loop(cond, body, st0)
-
-        # re-evaluate the final choice at the converged temperature field
-        # (the legacy flows report baseline power / Algorithm-2 delay there)
-        d_fin = sub.delay_at(st.T, st.idx, env)
-        f_fin = self.policy.frequency(sub, d_fin, env)
-        p_fin = sub.power_at(st.T, st.idx, f_fin, env)
-
-        return Solution(
-            idx=st.idx, f=st.f_sel, power=st.p_sel, obj=st.obj_sel, T=st.T,
-            n_iters=st.it, converged=st.done,
-            d_final=d_fin, f_final=f_fin, p_final=p_fin,
-            idx_hist=st.idx_hist, p_hist=st.p_hist, tj_hist=st.tj_hist,
-        )
+        st = jax.lax.while_loop(
+            lambda st: (~st.done) & (st.it < I),
+            lambda st: self._body(env, st), st0)
+        return self._finalize(env, st)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -185,11 +233,22 @@ class Solver:
         return jax.tree_util.tree_map(
             lambda x: jax.device_get(x), self._jit_solve(env, T0))
 
-    def solve_batch(self, envs: Dict[str, Any], T0=None) -> Solution:
+    def solve_batch(self, envs: Dict[str, Any], T0=None, *,
+                    early_freeze: bool = False,
+                    segment: int = 2) -> Solution:
         """vmap the fixed point over the leading axis of every env leaf.
 
         One compiled call evaluates the whole batch — this is the dynamic
         scheme's LUT build and the gamma sweep of §III-D.
+
+        ``early_freeze=True`` runs the batch in jitted segments of
+        ``segment`` fixed-point iterations, compacting converged elements
+        out of the batch between segments (they stop iterating instead of
+        riding lockstep until the slowest element converges).  Sub-batches
+        are padded to power-of-two buckets so at most ``log2(B)`` segment
+        shapes ever compile.  Decisions are bit-identical to the lockstep
+        path; continuous leaves agree to f32 round-off (see the module
+        docstring) — pinned in ``tests/test_railfield.py``.
         """
         envs = self._env_arrays(envs)
         B = int(next(iter(envs.values())).shape[0])
@@ -201,8 +260,50 @@ class Solver:
         if T0 is None:
             # one vmapped device call instead of B host-side T0 solves
             T0 = jax.vmap(self.substrate.T0)(envs)
+        if not early_freeze:
+            return jax.tree_util.tree_map(
+                lambda x: jax.device_get(x), self._jit_batch(envs, T0))
+        return self._solve_batch_freeze(envs, np.asarray(T0), B,
+                                        max(int(segment), 1))
+
+    # -- early-freeze batched fixed point ------------------------------
+    def _segment_fn(self, seg: int):
+        fn = self._jit_segments.get(seg)
+        if fn is None:
+            fn = jax.jit(jax.vmap(
+                lambda env, st: self._run_segment(env, st, seg),
+                in_axes=(0, 0)))
+            self._jit_segments[seg] = fn
+        return fn
+
+    def _solve_batch_freeze(self, envs: Env, T0: np.ndarray, B: int,
+                            seg: int) -> Solution:
+        env_np = {k: np.asarray(v) for k, v in envs.items()}
+        st = self._init_np(B, T0)
+        run_seg = self._segment_fn(seg)
+        active = np.arange(B)
+        while active.size:
+            # pad the active set to the next power-of-two bucket, capped at
+            # the full batch (the first segment must not waste lanes past
+            # B); padding repeats the first active element and its
+            # duplicate rows are discarded
+            P = min(1 << (int(active.size) - 1).bit_length(), B)
+            pad = np.concatenate(
+                [active, np.repeat(active[:1], P - active.size)])
+            sub_env = {k: v[pad] for k, v in env_np.items()}
+            sub_st = jax.tree_util.tree_map(lambda x: x[pad], st)
+            out = jax.device_get(run_seg(sub_env, sub_st))
+            n = int(active.size)
+            for cur, new in zip(st, out):
+                cur[active] = np.asarray(new)[:n]
+            keep = (~st.done[active]) & (st.it[active] < self.max_iters)
+            active = active[keep]
+        if self._jit_finalize is None:
+            self._jit_finalize = jax.jit(jax.vmap(self._finalize,
+                                                  in_axes=(0, 0)))
+        st_dev = jax.tree_util.tree_map(jnp.asarray, st)
         return jax.tree_util.tree_map(
-            lambda x: jax.device_get(x), self._jit_batch(envs, T0))
+            lambda x: jax.device_get(x), self._jit_finalize(envs, st_dev))
 
 
 # =============================================================================

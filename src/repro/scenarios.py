@@ -1,0 +1,304 @@
+"""Replayable control-plane scenarios (the §III-B day-in-the-life library).
+
+The diurnal sweep, the forced ambient jump and the straggler storm used to
+live as ad-hoc lambdas inside tests and the closed-loop example; this module
+promotes them — plus the load-spike day the RailField was built for — to
+first-class, *deterministic* scenario objects:
+
+- a :class:`Scenario` is pure data: an ambient trace, an optional load
+  trace (the serve-engine slot-occupancy fraction), scripted worker step
+  times (straggler material), and optional hotspot injections (a failed
+  fan / blocked airflow on one chip);
+- :func:`replay` runs a scenario through the full telemetry -> controller
+  -> actuator loop (ambient sensor, load telemetry, straggler monitor with
+  the mesh topology mapping, fleet actuator, elastic work migration) and
+  returns a :class:`ReplayResult` with the decisions, the energy ledger and
+  a fingerprint over the applied per-chip rail trace;
+- same trace -> same rail decisions, same replan count, same energy:
+  pinned by ``tests/test_scenarios.py``.
+
+The replan-economy comparison (scalar pod-median LUT vs per-chip RailField
+on ``diurnal_load_spike``) also lives in those tests: the RailField serves
+the same day with >=2x fewer full replans at >= equal mean power saving.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field as dfield
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro import control as ctl
+from repro.core import runtime as RT
+from repro.core import tpu_fleet as TF
+from repro.ft.elastic import ElasticActuator, ElasticWorkAssignment
+from repro.ft.monitor import StragglerDetector
+from repro.launch.mesh import PodTopology
+
+# ---------------------------------------------------------------------------
+# scenario data model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StepRecord:
+    """One scripted worker step time, delivered at ``tick``."""
+    tick: int
+    worker: str
+    step_s: float
+
+
+@dataclass(frozen=True)
+class Hotspot:
+    """A localized cooling fault: chip ``chip`` reads ``t_chip`` degC at
+    ``tick`` (failed fan, blocked airflow) — the straggler/rebalance
+    trigger material."""
+    tick: int
+    chip: int
+    t_chip: float
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    ticks: int
+    ambient: Callable[[float], float]
+    load: Optional[Callable[[float], float]] = None
+    steps: Tuple[StepRecord, ...] = ()
+    hotspots: Tuple[Hotspot, ...] = ()
+    description: str = ""
+
+    def ambient_at(self, tick: int) -> float:
+        return float(self.ambient(float(tick)))
+
+    def load_at(self, tick: int) -> Optional[float]:
+        return None if self.load is None else float(self.load(float(tick)))
+
+
+# ---------------------------------------------------------------------------
+# the library
+# ---------------------------------------------------------------------------
+
+
+def diurnal(ticks: int = 48, base: float = 25.0, amp: float = 7.0,
+            period: Optional[int] = None) -> Scenario:
+    """The quasi-static day: a sine between ``base - amp`` and
+    ``base + amp`` — everything should ride the fast path after the cold
+    start."""
+    p = float(period if period is not None else ticks)
+    return Scenario(
+        name="diurnal", ticks=ticks,
+        ambient=lambda now: base + amp * np.sin(2.0 * np.pi * now / p),
+        description="quasi-static diurnal ambient sine")
+
+
+def ambient_jump(ticks: int = 16, t0: float = 22.0, t1: float = 34.0,
+                 at: int = 8) -> Scenario:
+    """A cooling failure / hot-aisle event: step change ``t0 -> t1``."""
+    return Scenario(
+        name="ambient_jump", ticks=ticks,
+        ambient=lambda now: t1 if now >= at else t0,
+        description=f"step {t0}C -> {t1}C at tick {at}")
+
+
+def straggler_storm(ticks: int = 24, workers: int = 4, storm_at: int = 12,
+                    slow_worker: int = 2, slow_factor: float = 2.2,
+                    hot_chip_c: float = 94.5) -> Scenario:
+    """A worker turns slow on a chip whose cooling just failed: healthy
+    baseline steps establish the rolling median, then ``slow_worker``
+    reports ``slow_factor`` x median steps while its chip reads
+    ``hot_chip_c`` — boost cannot hold the clock there, so the controller
+    must escalate to ``Rebalance`` and the elastic assignment must migrate
+    the work off the chip."""
+    steps: List[StepRecord] = []
+    for t in range(ticks):
+        for w in range(workers):
+            s = 1.0
+            if t >= storm_at and w == slow_worker:
+                s = slow_factor
+            steps.append(StepRecord(t, f"worker{w}", s))
+    hotspots = tuple(Hotspot(t, slow_worker, hot_chip_c)
+                     for t in range(storm_at, min(storm_at + 2, ticks)))
+    return Scenario(
+        name="straggler_storm", ticks=ticks,
+        ambient=lambda now: 25.0,
+        steps=tuple(steps), hotspots=hotspots,
+        description="hot-chip straggler escalating to rebalance")
+
+
+def load_spike(ticks: int = 48, base: float = 0.95, low: float = 0.45,
+               dips: Tuple[Tuple[int, int], ...] = ((12, 8), (32, 8))
+               ) -> Scenario:
+    """Serving load swinging between ``base`` and ``low`` (off-peak dips /
+    recovery spikes).  Every swing crosses the scalar controller's
+    ``util_band`` and forces a ``util_drift`` replan; the RailField answers
+    it from the utilization axis."""
+    def trace(now: float) -> float:
+        for start, width in dips:
+            if start <= now < start + width:
+                return low
+        return base
+
+    return Scenario(
+        name="load_spike", ticks=ticks,
+        ambient=lambda now: 25.0, load=trace,
+        description="load swings riding the utilization axis")
+
+
+def diurnal_load_spike(ticks: int = 48, base: float = 25.0,
+                       amp: float = 7.0) -> Scenario:
+    """The acceptance day: diurnal ambient AND load spikes at once — the
+    scenario the scalar LUT replans through and the RailField serves from
+    the table."""
+    d = diurnal(ticks, base, amp)
+    ls = load_spike(ticks)
+    return Scenario(
+        name="diurnal_load_spike", ticks=ticks,
+        ambient=d.ambient, load=ls.load,
+        description="diurnal ambient + serving load spikes")
+
+
+SCENARIOS: Dict[str, Callable[[], Scenario]] = {
+    "diurnal": diurnal,
+    "ambient_jump": ambient_jump,
+    "straggler_storm": straggler_storm,
+    "load_spike": load_spike,
+    "diurnal_load_spike": diurnal_load_spike,
+}
+
+
+# ---------------------------------------------------------------------------
+# replay harness
+# ---------------------------------------------------------------------------
+
+
+class _LoadTelemetry:
+    """Scripted serve-engine load as TickSamples (slots=64 quantization)."""
+
+    SLOTS = 64
+
+    def __init__(self, scenario: Scenario):
+        self.scenario = scenario
+
+    def poll(self, now: float) -> List:
+        load = self.scenario.load_at(int(now))
+        if load is None:
+            return []
+        return [ctl.TickSample(
+            tick=int(now), queued=0,
+            active=int(round(load * self.SLOTS)), finished=0, tokens=0,
+            tick_s=0.0, slots=self.SLOTS)]
+
+
+@dataclass
+class ReplayResult:
+    name: str
+    ticks: int
+    replans: int
+    lut_hits: int
+    boosts: int
+    rebalances: int
+    replan_reasons: List[str]
+    mean_saving: float
+    energy_j: float
+    t_max: float
+    condemned: Tuple[int, ...]
+    shares: np.ndarray       # final elastic work shares (chips,)
+    rails: np.ndarray        # (ticks, 2, chips) applied (v_core, v_sram)
+    util_trace: np.ndarray   # (ticks, chips) utilization the loop settled at
+
+    @property
+    def fingerprint(self) -> str:
+        """Determinism pin: hashes the applied rail trace, the replan
+        ledger and the energy integral."""
+        h = hashlib.sha256()
+        h.update(self.rails.astype(np.float64).tobytes())
+        h.update(np.float64(self.energy_j).tobytes())
+        h.update(",".join(self.replan_reasons).encode())
+        h.update(np.asarray(sorted(self.condemned), np.int64).tobytes())
+        return h.hexdigest()[:16]
+
+
+def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
+           = None, controller: Optional[ctl.LutController] = None,
+           tick_s: float = 60.0, guard_band_c: float = 3.0,
+           sweep=(10.0, 45.0, 8), util_sweep=(0.25, 1.0, 4)) -> ReplayResult:
+    """Run ``scenario`` through the full control loop; deterministic.
+
+    ``controller=None`` builds the default RailField controller over the
+    runtime's planner; pass a prebuilt controller to compare fast paths
+    (e.g. ``rt.controller(lut=rt.build_lut(...))`` for the scalar
+    baseline).  ``tick_s`` converts the power readouts into the energy
+    ledger (60 s control ticks by default).
+    """
+    rt = runtime if runtime is not None else RT.EnergyAwareRuntime(
+        TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                     collective_s=0.2),
+        policy="power_save")
+    if controller is None:
+        from repro.control.lut import sweep_points
+        controller = rt.controller(
+            field=rt.build_field(sweep_points(*sweep),
+                                 sweep_points(*util_sweep)),
+            guard_band_c=guard_band_c)
+    chips = rt.substrate.n_domains
+    topo = PodTopology(grid=rt.substrate.grid)
+
+    det = StragglerDetector(threshold=1.5, window=8, min_samples=4)
+    mon = ctl.MonitorTelemetry(det, topology=topo)
+    assignment = ElasticWorkAssignment(chips)
+    elastic = ElasticActuator(assignment)
+    fleet = ctl.FleetActuator.from_runtime(
+        rt, t_amb=scenario.ambient_at(0),
+        field=getattr(controller, "field", None))
+    bus = ctl.TelemetryBus([ctl.AmbientSensor(scenario.ambient),
+                            _LoadTelemetry(scenario), mon, elastic, fleet])
+    loop = ctl.ControlLoop(bus, controller, [fleet, elastic])
+
+    # a reused controller (warm jits, shared field) must start the day
+    # from scratch: reset the online state (t_prev / warm fields / plan),
+    # and report stats as deltas (reset leaves the cumulative counters)
+    if hasattr(controller, "reset"):
+        controller.reset()
+    st = controller.stats
+    base = (st.replans, st.lut_hits, st.boosts, st.rebalances,
+            len(st.replan_reasons))
+
+    steps_by_tick: Dict[int, List[StepRecord]] = {}
+    for rec in scenario.steps:
+        steps_by_tick.setdefault(rec.tick, []).append(rec)
+    hot_by_tick: Dict[int, List[Hotspot]] = {}
+    for h in scenario.hotspots:
+        hot_by_tick.setdefault(h.tick, []).append(h)
+
+    rails = np.zeros((scenario.ticks, 2, chips), np.float32)
+    util_trace = np.zeros((scenario.ticks, chips), np.float32)
+    savings, powers, t_maxes = [], [], []
+    for tick in range(scenario.ticks):
+        for rec in steps_by_tick.get(tick, ()):
+            mon.record_step(rec.worker, tick, rec.step_s)
+        for h in hot_by_tick.get(tick, ()):
+            fleet.T = np.asarray(fleet.T).copy()
+            fleet.T[h.chip] = h.t_chip  # the TSD reads the cooling fault
+        rep = loop.step(now=float(tick))
+        rails[tick, 0] = fleet.v_core
+        rails[tick, 1] = fleet.v_sram
+        u = rep.snapshot.util(chips)
+        util_trace[tick] = 1.0 if u is None else u
+        ro = rep.readout
+        savings.append(ro.saving)
+        powers.append(ro.pod_power_w)
+        t_maxes.append(ro.t_max)
+
+    return ReplayResult(
+        name=scenario.name, ticks=scenario.ticks,
+        replans=st.replans - base[0], lut_hits=st.lut_hits - base[1],
+        boosts=st.boosts - base[2], rebalances=st.rebalances - base[3],
+        replan_reasons=list(st.replan_reasons[base[4]:]),
+        mean_saving=float(np.mean(savings)),
+        energy_j=float(np.sum(powers) * tick_s),
+        t_max=float(np.max(t_maxes)),
+        condemned=tuple(sorted(assignment.condemned)),
+        shares=assignment.shares.copy(),
+        rails=rails, util_trace=util_trace)

@@ -127,11 +127,13 @@ class Engine:
                 self.finished.append(req)
                 self.slot_req[i] = None
         if self.on_tick:
+            # slots rides along so the control plane can fold active/slots
+            # into the load fraction feeding the RailField utilization axis
             smp = TickSample(
                 tick=self.ticks, queued=len(self.queue),
                 active=sum(r is not None for r in self.slot_req),
                 finished=len(self.finished), tokens=len(active),
-                tick_s=time.perf_counter() - t0)
+                tick_s=time.perf_counter() - t0, slots=self.B)
             for cb in self.on_tick:
                 cb(smp)
 

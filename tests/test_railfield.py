@@ -1,0 +1,357 @@
+"""RailField — the per-chip 2-axis control fast path (ISSUE-4 tentpole).
+
+Pins the refactor's trust contracts:
+
+- the pod-median reduction of the 2-D table reproduces the legacy scalar
+  ``dynamic_lut`` EXACTLY (the DynamicLut facade is a view of the field),
+- per-chip bilinear interpolation stays within one 10 mV rail step of the
+  full ``Solver`` fixed point at every chip across the 2-D sweep interior,
+- the early-freeze ``solve_batch`` path is bit-identical to the lockstep
+  path (the satellite's parity pin),
+- the controller answers (ambient, utilization) pairs from the field —
+  load swings are LUT hits, not ``util_drift`` replans — while excursions
+  past the solved utilization axis still replan,
+- per-chip boost overrides survive field rewrites chip-wise,
+- the mesh topology mapping validates worker names (ranks past the pod and
+  non-numeric names land on -1, surfaced as ``unmapped``).
+"""
+import numpy as np
+import pytest
+
+from repro import control as ctl
+from repro import policy as pol
+from repro.core import runtime as RT
+from repro.core import tpu_fleet as TF
+from repro.launch.mesh import PodTopology
+
+T_KNOTS = [10.0, 15.0, 20.0, 25.0, 30.0, 35.0, 40.0, 45.0]
+U_KNOTS = [0.25, 0.5, 0.75, 1.0]
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                        collective_s=0.2)
+
+
+@pytest.fixture(scope="module")
+def runtime(profile):
+    return RT.EnergyAwareRuntime(profile, policy="power_save")
+
+
+@pytest.fixture(scope="module")
+def field(runtime):
+    return runtime.build_field(T_KNOTS, U_KNOTS)
+
+
+class TestRailFieldTable:
+    def test_median_reduction_matches_legacy_lut_exactly(self, runtime,
+                                                         field):
+        # the golden pin: the scalar §III-B scheme is a REDUCTION of the
+        # field — pod median over chips at the full-utilization slice,
+        # same fixed points, zero drift allowed
+        legacy = runtime.dynamic_lut(T_KNOTS)
+        med = field.median_lut().as_table()
+        assert set(med) == set(legacy)
+        for t, (vc, vs) in legacy.items():
+            assert med[t][0] == vc
+            assert med[t][1] == vs
+
+    def test_per_chip_interp_within_one_rail_step(self, runtime, field):
+        # the per-chip guard-band contract, checked at 2-D interior
+        # midpoints (worst case for bilinear interpolation)
+        chips = runtime.substrate.n_domains
+        for tm in (12.5, 27.5, 42.5):
+            for um in (0.375, 0.875):
+                plan, _ = runtime.planner.plan_at(
+                    tm, np.full(chips, um, np.float32))
+                vc, vs = field.lookup(tm, um)
+                assert np.max(np.abs(vc - plan.v_core)) \
+                    <= field.RAIL_STEP_V + 1e-9
+                assert np.max(np.abs(vs - plan.v_sram)) \
+                    <= field.RAIL_STEP_V + 1e-9
+
+    def test_spatial_gradient_survives_the_fast_path(self, runtime, field):
+        # this pod spreads heat well, so UNIFORM load converges to uniform
+        # rails; the solver's spatial rail gradient appears under
+        # non-uniform load — and the per-chip utilization axis reproduces
+        # it chip-wise, where the scalar pod-median threw it away
+        chips = field.chips
+        u = np.where(np.arange(chips) < chips // 4, 0.3,
+                     1.0).astype(np.float32)
+        plan, _ = runtime.planner.plan_at(30.0, u)
+        vc, vs = field.lookup(30.0, u)
+        assert np.ptp(plan.v_core) > 0.0  # the solver is non-uniform here
+        assert np.ptp(vc) > 0.0  # ... and the fast path keeps the gradient
+        assert vc.shape == vs.shape == (chips,)
+        assert np.max(np.abs(vc - plan.v_core)) <= field.RAIL_STEP_V + 1e-9
+        assert np.max(np.abs(vs - plan.v_sram)) <= field.RAIL_STEP_V + 1e-9
+
+    def test_lookup_clamps_both_axes(self, field):
+        lo = field.lookup(field.t_min - 10.0, field.u_min - 0.5)
+        lo_edge = field.lookup(field.t_min, field.u_min)
+        hi = field.lookup(field.t_max + 10.0, field.u_max + 0.5)
+        hi_edge = field.lookup(field.t_max, field.u_max)
+        np.testing.assert_array_equal(lo[0], lo_edge[0])
+        np.testing.assert_array_equal(lo[1], lo_edge[1])
+        np.testing.assert_array_equal(hi[0], hi_edge[0])
+        np.testing.assert_array_equal(hi[1], hi_edge[1])
+
+    def test_per_chip_util_interpolates_per_chip(self, field):
+        # chip 0 at low util, chip 1 at high: each reads its own axis row
+        u = np.full(field.chips, 0.25, np.float64)
+        u[1] = 1.0
+        vc, _ = field.lookup(25.0, u)
+        vc_lo, _ = field.lookup(25.0, 0.25)
+        vc_hi, _ = field.lookup(25.0, 1.0)
+        assert vc[0] == vc_lo[0]
+        assert vc[1] == vc_hi[1]
+
+    def test_covers_and_validation(self, field):
+        assert field.covers(30.0) and not field.covers(55.0)
+        assert field.covers(47.0, margin=2.0)
+        assert field.covers_util(0.9) and field.covers_util(1.2, margin=0.25)
+        assert not field.covers_util(1.3, margin=0.25)
+        with pytest.raises(ValueError):
+            ctl.RailField([10.0], [], np.zeros((1, 0, 4)),
+                          np.zeros((1, 0, 4)))
+        with pytest.raises(ValueError):
+            ctl.RailField([10.0, 20.0], [1.0], np.zeros((1, 1, 4)),
+                          np.zeros((1, 1, 4)))
+
+    def test_nominal_fallback_below_the_axis(self, runtime, field):
+        # sensed load below u_min must NOT be read against the clamped
+        # u_min slice (that inflates the reported saving ~2.5x); the
+        # actuator falls back to the exact nominal solve there
+        fleet = ctl.FleetActuator.from_runtime(runtime, field=field)
+        us = np.full(field.chips, 0.1, np.float32)
+        p_clamped = float(np.sum(field.nominal_power(25.0, us)))
+        p_used = fleet._nominal_power(25.0, us)
+        p_exact = float(np.sum(runtime.planner.baseline_power(
+            runtime.planner.env(25.0, us))))
+        assert p_used == pytest.approx(p_exact)
+        assert p_used < p_clamped
+        # inside the axis the interpolated grid IS the reference
+        us_in = np.full(field.chips, 0.8, np.float32)
+        assert fleet._nominal_power(25.0, us_in) == pytest.approx(
+            float(np.sum(field.nominal_power(25.0, us_in))))
+
+    def test_baseline_prefill_hits_at_grid_knots(self, profile):
+        # the 2-D build prefills the nominal-baseline cache with keys
+        # matching baseline_power's float64 ambient — a replan AT a knot
+        # (incl. non-representable ones like 15.833...) never re-solves
+        from repro.control.lut import sweep_points
+        rt2 = RT.EnergyAwareRuntime(profile, policy="power_save")
+        t_knots = sweep_points(10.0, 45.0, 7)  # 15.8333..., 21.666...
+        rt2.build_field(t_knots, [0.5, 1.0])
+        assert rt2.planner.baseline_solves == 0
+        for t in t_knots:
+            rt2.planner.baseline_power(rt2.planner.env(t))
+        assert rt2.planner.baseline_solves == 0  # every knot was prefilled
+        rt2.planner.baseline_power(rt2.planner.env(26.2))  # off-knot
+        assert rt2.planner.baseline_solves == 1
+
+    def test_nominal_power_grid_rides_along(self, field):
+        p = field.nominal_power(27.5, 0.8)
+        assert p is not None and p.shape == (field.chips,)
+        assert np.all(p > 0)
+        # nominal power falls with utilization (dynamic part scales)
+        p_lo = field.nominal_power(27.5, 0.3)
+        assert float(np.sum(p_lo)) < float(np.sum(p))
+
+
+class TestEarlyFreezeParity:
+    # decisions must be bitwise; continuous thermal/power leaves agree to
+    # f32 round-off (XLA's summation order inside the vmapped solves is
+    # batch-shape-dependent, so compacted sub-batches round differently at
+    # ~1e-4 degC — orders below delta_t=0.5 and the 10 mV rail grid)
+    EXACT = ("idx", "n_iters", "converged", "idx_hist")
+    ATOL = {"T": 2e-3, "tj_hist": 2e-3, "d_final": 1e-5}
+
+    def test_decision_parity_with_lockstep(self, runtime):
+        sub = runtime.substrate
+        solver = pol.cached_solver(sub, runtime.policy_obj,
+                                   runtime.planner.delta_t,
+                                   runtime.planner.max_iters)
+        chips = sub.n_domains
+        t = np.asarray([10.0, 21.0, 32.0, 43.0, 12.5, 44.0], np.float32)
+        B = t.size
+        u = np.asarray([1.0, 0.5, 0.75, 1.0, 0.25, 0.6], np.float32)
+        envs = {"t_amb": t,
+                "util": u[:, None] * np.ones((1, chips), np.float32),
+                "gamma": np.full((B,), runtime.policy_obj.gamma,
+                                 np.float32)}
+        lock = solver.solve_batch(envs)
+        frozen = solver.solve_batch(envs, early_freeze=True)
+        assert int(np.max(lock.n_iters)) > int(np.min(lock.n_iters)), \
+            "test batch must have heterogeneous convergence"
+        for name, a, b in zip(lock._fields, lock, frozen):
+            a, b = np.asarray(a), np.asarray(b)
+            if name in self.EXACT:
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"early-freeze changed Solution.{name}")
+            else:
+                np.testing.assert_allclose(
+                    a, b, rtol=1e-5, atol=self.ATOL.get(name, 1e-6),
+                    err_msg=f"early-freeze drifted on Solution.{name}")
+        # the decoded rails — the numbers the control plane acts on — are
+        # identical voltages, not merely close
+        np.testing.assert_array_equal(sub.decode(lock.idx),
+                                      sub.decode(frozen.idx))
+
+    def test_segment_size_does_not_change_results(self, runtime):
+        sub = runtime.substrate
+        solver = pol.cached_solver(sub, runtime.policy_obj,
+                                   runtime.planner.delta_t,
+                                   runtime.planner.max_iters)
+        chips = sub.n_domains
+        envs = {"t_amb": np.asarray([15.0, 35.0], np.float32),
+                "util": np.ones((2, chips), np.float32),
+                "gamma": np.full((2,), runtime.policy_obj.gamma,
+                                 np.float32)}
+        a = solver.solve_batch(envs, early_freeze=True, segment=1)
+        b = solver.solve_batch(envs, early_freeze=True, segment=3)
+        np.testing.assert_array_equal(a.idx, b.idx)
+        np.testing.assert_array_equal(a.T, b.T)
+
+
+class TestFieldController:
+    def _snap(self, t_amb, **kw):
+        return ctl.Snapshot(t_amb=t_amb, **kw)
+
+    def test_load_swing_is_a_lut_hit_not_a_replan(self, runtime, field):
+        c = runtime.controller(field=field, guard_band_c=3.0)
+        chips = runtime.substrate.n_domains
+        c.decide(self._snap(25.0))  # cold start
+        full = c.decide(self._snap(25.0),
+                        util=np.ones(chips, np.float32))
+        dip = c.decide(self._snap(25.0),
+                       util=np.full(chips, 0.45, np.float32))
+        assert c.stats.replans == 1  # only the cold start
+        assert c.stats.lut_hits == 2
+        vc_full = np.asarray(full[0].v_core)
+        vc_dip = np.asarray(dip[0].v_core)
+        assert full[0].source == dip[0].source == "lut"
+        # lighter load -> cooler chips -> lower (or equal) rails
+        assert np.all(vc_dip <= vc_full + 1e-9)
+
+    def test_util_past_the_axis_replans(self, runtime, field):
+        c = runtime.controller(field=field, guard_band_c=3.0,
+                               util_band=0.1)
+        chips = runtime.substrate.n_domains
+        c.decide(self._snap(25.0))
+        c.decide(self._snap(25.0), util=np.full(chips, 1.3, np.float32))
+        assert any(r.startswith("util_range")
+                   for r in c.stats.replan_reasons)
+
+    def test_snapshot_load_feeds_the_second_axis(self, runtime, field):
+        # engine telemetry (active/slots) reaches the field without an
+        # explicit util argument
+        c = runtime.controller(field=field, guard_band_c=3.0)
+        c.decide(self._snap(25.0))
+        a_full = c.decide(self._snap(25.0, active=64, slots=64))
+        a_low = c.decide(self._snap(25.0, active=16, slots=64))
+        assert c.stats.replans == 1 and c.stats.lut_hits == 2
+        assert np.all(np.asarray(a_low[0].v_core)
+                      <= np.asarray(a_full[0].v_core) + 1e-9)
+
+    def test_field_rails_are_per_chip(self, runtime, field):
+        c = runtime.controller(field=field)
+        acts = c.decide(self._snap(27.0))  # cold start -> solver (per-chip)
+        acts = c.decide(self._snap(27.2))  # fast path
+        rails = acts[0]
+        assert rails.source == "lut"
+        assert np.asarray(rails.v_core).shape == (field.chips,)
+
+    def test_migrated_chip_is_not_boosted(self, runtime, field):
+        c = runtime.controller(field=field)
+        chips = runtime.substrate.n_domains
+        shares = np.ones(chips, np.float32)
+        shares[5] = 0.0  # chip 5 already drained by a Rebalance
+        snap = self._snap(25.0, shares=shares, stragglers=[
+            ctl.StragglerSample("worker5", 0, 2.0, chip=5)])
+        acts = c.decide(snap)
+        assert not any(isinstance(a, (ctl.BoostRail, ctl.Rebalance))
+                       for a in acts)
+
+
+class TestPerChipBoostSurvival:
+    def test_boosts_survive_field_rewrites_per_chip(self, runtime):
+        fleet = ctl.FleetActuator.from_runtime(runtime)
+        chips = runtime.substrate.n_domains
+        fleet.apply(ctl.BoostRail(3, 0.73, 0.83, 1.0))
+        fleet.apply(ctl.BoostRail(9, TF.V_CORE_NOM, TF.V_SRAM_NOM, 1.0))
+        # a per-chip field write must preserve EACH chip's own boost rails
+        vc = np.full(chips, 0.60, np.float32)
+        vs = np.full(chips, 0.70, np.float32)
+        fleet.apply(ctl.SetRails(vc, vs, source="lut"))
+        assert fleet.v_core[3] == pytest.approx(0.73)
+        assert fleet.v_sram[3] == pytest.approx(0.83)
+        assert fleet.v_core[9] == pytest.approx(TF.V_CORE_NOM)
+        assert fleet.v_core[4] == pytest.approx(0.60)
+        fleet.apply(ctl.Rebalance(3, "too hot"))
+        fleet.apply(ctl.SetRails(vc, vs, source="lut"))
+        assert fleet.v_core[3] == pytest.approx(0.60)  # boost released
+        assert fleet.v_core[9] == pytest.approx(TF.V_CORE_NOM)
+
+
+class TestPodTopology:
+    def test_valid_ranks_map_row_major(self):
+        topo = PodTopology(grid=(16, 16))
+        assert topo.chip_of("worker7") == 7
+        assert topo.chip_of("tpu-v4-rank12") == 12  # trailing group wins
+        assert topo.coords(17) == (1, 1)
+        assert topo.pod_of(17) == 0
+
+    def test_rank_past_pod_size_is_unmapped(self):
+        topo = PodTopology(grid=(16, 16))
+        assert topo.chip_of("worker256") == -1  # NOT chip 0
+        assert topo.chip_of("worker999") == -1
+        assert topo.chip_of_rank(-3) == -1
+
+    def test_non_numeric_worker_is_unmapped(self):
+        topo = PodTopology(grid=(16, 16))
+        assert topo.chip_of("coordinator") == -1  # NOT chip 0
+
+    def test_host_worker_composition(self):
+        topo = PodTopology(grid=(16, 16), workers_per_host=8)
+        assert topo.chip_of("host1-worker7") == 15  # 1*8 + 7
+        assert topo.chip_of("worker7") == 7  # single group: plain rank
+        # a stray digit group is NOT a host index: rank stays 12, not 4*8+12
+        assert topo.chip_of("tpu-v4-rank12") == 12
+
+    def test_multi_pod_foreign_ranks_are_unmapped(self):
+        # the controller owns ONE pod: ranks from the other pod must not
+        # silently fold onto this pod's chips
+        topo = PodTopology(grid=(16, 16), n_pods=2)  # owns pod 0
+        assert topo.n_chips == 512
+        assert topo.chip_of("worker44") == 44
+        assert topo.chip_of("worker300") == -1  # pod 1's rank: not ours
+        assert topo.pod_of(300) == 1
+        assert topo.chip_of("worker512") == -1
+
+    def test_multi_pod_owned_and_fleet_views(self):
+        pod1 = PodTopology(grid=(16, 16), n_pods=2, pod_index=1)
+        assert pod1.chip_of("worker300") == 44  # pod 1, local 44
+        assert pod1.chip_of("worker44") == -1  # pod 0's rank
+        fleet = PodTopology(grid=(16, 16), n_pods=2, pod_index=None)
+        assert fleet.chip_of("worker300") == 44  # fleet-wide local view
+        assert fleet.chip_of("worker44") == 44
+
+    def test_monitor_routes_through_topology(self, runtime, field):
+        from repro.ft.monitor import StragglerDetector
+        det = StragglerDetector(threshold=1.5, window=8, min_samples=4)
+        topo = PodTopology(grid=runtime.substrate.grid)
+        mon = ctl.MonitorTelemetry(det, topology=topo)
+        for s in range(4):
+            mon.record_step("coordinator", s, 1.0)
+        mon.record_step("coordinator", 4, 2.0)  # straggler, unmappable
+        samples = mon.poll(0.0)
+        stragglers = [s for s in samples
+                      if isinstance(s, ctl.StragglerSample)]
+        assert len(stragglers) == 1 and stragglers[0].chip == -1
+        c = runtime.controller(field=field)
+        acts = c.decide(ctl.Snapshot(t_amb=25.0, stragglers=stragglers))
+        assert c.stats.unmapped == 1
+        assert not any(isinstance(a, (ctl.BoostRail, ctl.Rebalance))
+                       for a in acts)

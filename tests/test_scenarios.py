@@ -1,0 +1,153 @@
+"""repro.scenarios — the replayable scenario library (ISSUE-4 satellite).
+
+Determinism (same trace -> same rail decisions, replan count and energy),
+the RailField replan-economy acceptance (>=2x fewer full replans than the
+scalar LUT on the diurnal + load-spike day at >= equal mean power saving),
+and Rebalance actions observably migrating work through ``ft/elastic``.
+"""
+import numpy as np
+import pytest
+
+from repro import scenarios as SC
+from repro.core import runtime as RT
+from repro.core import tpu_fleet as TF
+from repro.control.lut import sweep_points
+from repro.ft.elastic import ElasticWorkAssignment
+
+T_KNOTS = sweep_points(10.0, 45.0, 8)
+U_KNOTS = sweep_points(0.25, 1.0, 4)
+
+
+@pytest.fixture(scope="module")
+def runtime():
+    prof = TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                        collective_s=0.2)
+    return RT.EnergyAwareRuntime(prof, policy="power_save")
+
+
+@pytest.fixture(scope="module")
+def field(runtime):
+    return runtime.build_field(T_KNOTS, U_KNOTS)
+
+
+def _field_controller(runtime, field):
+    return runtime.controller(field=field, guard_band_c=3.0)
+
+
+def _scalar_controller(runtime):
+    return runtime.controller(lut=runtime.build_lut(T_KNOTS),
+                              guard_band_c=3.0)
+
+
+class TestLibrary:
+    def test_registry_builds_every_scenario(self):
+        for name, mk in SC.SCENARIOS.items():
+            sc = mk()
+            assert sc.name == name and sc.ticks > 0
+            assert np.isfinite(sc.ambient_at(0))
+
+    def test_traces_are_pure_functions_of_time(self):
+        sc = SC.diurnal_load_spike()
+        assert sc.ambient_at(7) == sc.ambient_at(7)
+        assert sc.load_at(12) == sc.load_at(12)
+        assert sc.load_at(12) != sc.load_at(0)  # the dip is real
+
+
+class TestDeterminism:
+    def test_same_trace_same_decisions_replans_energy(self, runtime, field):
+        sc = SC.diurnal(ticks=12, period=48)
+        a = SC.replay(sc, runtime=runtime,
+                      controller=_field_controller(runtime, field))
+        b = SC.replay(sc, runtime=runtime,
+                      controller=_field_controller(runtime, field))
+        assert a.fingerprint == b.fingerprint
+        assert a.replans == b.replans
+        assert a.replan_reasons == b.replan_reasons
+        assert a.energy_j == b.energy_j
+        np.testing.assert_array_equal(a.rails, b.rails)
+
+    def test_reused_controller_replays_identically(self, runtime, field):
+        # replay() resets the controller's online state (t_prev, warm
+        # fields, last plan) so one controller can serve many days and
+        # each replayed day starts cold — decisions included
+        sc = SC.diurnal(ticks=8, period=48)
+        c = _field_controller(runtime, field)
+        a = SC.replay(sc, runtime=runtime, controller=c)
+        b = SC.replay(sc, runtime=runtime, controller=c)
+        assert a.fingerprint == b.fingerprint
+        assert a.replan_reasons == b.replan_reasons  # cold_start both days
+        assert b.replan_reasons[0] == "cold_start"
+
+
+class TestReplanEconomy:
+    def test_field_serves_the_day_with_2x_fewer_replans(self, runtime,
+                                                        field):
+        # the ISSUE-4 acceptance scenario: diurnal ambient + load spikes
+        sc = SC.diurnal_load_spike(ticks=48)
+        fld = SC.replay(sc, runtime=runtime,
+                        controller=_field_controller(runtime, field))
+        base = SC.replay(sc, runtime=runtime,
+                         controller=_scalar_controller(runtime))
+        # every load swing forced the scalar controller to the solver;
+        # the field answered them from the utilization axis
+        assert any(r == "util_drift" for r in base.replan_reasons)
+        assert not any(r.startswith("util") for r in fld.replan_reasons)
+        assert fld.replans * 2 <= base.replans
+        # ... at equal or better mean power saving, same thermal safety
+        assert fld.mean_saving >= base.mean_saving - 1e-3
+        assert fld.t_max < TF.T_MAX_CHIP
+        assert base.t_max < TF.T_MAX_CHIP
+        assert fld.lut_hits + fld.replans == sc.ticks
+
+    def test_quiet_diurnal_rides_the_fast_path(self, runtime, field):
+        r = SC.replay(SC.diurnal(ticks=12, period=48), runtime=runtime,
+                      controller=_field_controller(runtime, field))
+        assert r.replans == 1  # cold start only
+        assert r.lut_hits == 11
+        assert r.mean_saving > 0.0
+
+    def test_ambient_jump_still_replans(self, runtime, field):
+        r = SC.replay(SC.ambient_jump(ticks=12, at=6), runtime=runtime,
+                      controller=_field_controller(runtime, field))
+        assert any(x.startswith("ambient_jump") for x in r.replan_reasons)
+
+
+class TestRebalanceMigration:
+    def test_storm_condemns_and_migrates_work(self, runtime, field):
+        sc = SC.straggler_storm(ticks=20, storm_at=10)
+        r = SC.replay(sc, runtime=runtime,
+                      controller=_field_controller(runtime, field))
+        hot = sc.hotspots[0].chip
+        assert r.rebalances >= 1
+        assert hot in r.condemned
+        # the chip's share went to zero and the survivors absorbed it
+        assert r.shares[hot] == 0.0
+        assert float(r.shares.sum()) == pytest.approx(len(r.shares),
+                                                      rel=1e-5)
+        assert np.all(r.shares[np.arange(len(r.shares)) != hot] > 1.0)
+        # ... and the control loop actually planned for the migrated load:
+        # the condemned chip's utilization collapses after the rebalance
+        assert r.util_trace[-1, hot] == 0.0
+        assert r.util_trace[0, hot] > 0.0
+
+    def test_assignment_condemn_restore_conserves_work(self):
+        a = ElasticWorkAssignment(8)
+        a.condemn(3)
+        assert a.shares[3] == 0.0
+        assert float(a.shares.sum()) == pytest.approx(8.0, rel=1e-6)
+        a.condemn(3)  # idempotent
+        assert float(a.shares.sum()) == pytest.approx(8.0, rel=1e-6)
+        a.restore(3)
+        assert a.shares[3] > 0.0
+        assert float(a.shares.sum()) == pytest.approx(8.0, rel=1e-6)
+        # out-of-range chips are ignored, never crash the tick
+        a.condemn(99)
+        a.restore(99)
+        assert float(a.shares.sum()) == pytest.approx(8.0, rel=1e-6)
+
+    def test_cannot_condemn_the_last_chip(self):
+        a = ElasticWorkAssignment(2)
+        a.condemn(0)
+        a.condemn(1)  # someone has to do the work
+        assert a.shares[1] > 0.0
+        assert a.mesh_hint() == (1, 1)
