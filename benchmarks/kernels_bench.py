@@ -110,6 +110,23 @@ def run(quick: bool = False) -> Dict:
         kref.overscale_matmul_ref, a8, b8, ug, ub, cdf)
     out["overscale_matmul_interpret_us"] = _time(
         lambda *a: ops.overscale_mm(*a), a8, b8, ug, ub, cdf)
+
+    # ABFT-checksummed variant (repro.tolerance): the jnp oracle is the
+    # gated timing; the fused Pallas kernel is structural on CPU.  The
+    # detect rate is data (deterministic given the key), not a gate.
+    out["abft_matmul_us"] = _time(
+        kref.abft_matmul_ref, a8, b8, ug, ub, cdf)
+    out["abft_matmul_interpret_us"] = _time(
+        lambda *a: ops.abft_mm(*a), a8, b8, ug, ub, cdf)
+    from repro.tolerance import AbftMatmul
+    sparse = np.zeros(32)
+    sparse[20:] = 0.002 / 12  # distinct deltas: syndromes localize
+    af = jax.random.normal(jax.random.fold_in(key, 14), (M, M))
+    bf = jax.random.normal(jax.random.fold_in(key, 15), (M, M))
+    mm = AbftMatmul(sparse, jax.random.fold_in(key, 16))
+    mm(af, bf)
+    assert mm.counters.injected > 0
+    out["sdc_detect_rate"] = mm.counters.detect_rate
     return out
 
 

@@ -27,7 +27,8 @@ from repro.control.actuator import (Actuator, EngineActuator, FleetActuator,
                                     FleetReadout)
 from repro.control.controller import (Action, BoostRail, Controller,
                                       ControllerStats, LutController,
-                                      Rebalance, SetRails, Throttle)
+                                      RailBackoff, Rebalance, Restore,
+                                      SetRails, Throttle)
 from repro.control.loop import ControlLoop, LoopReport
 from repro.control.lut import (DEFAULT_UTIL_KNOTS, DynamicLut, RailField,
                                sweep_points)
@@ -35,19 +36,20 @@ from repro.control.planner import FleetPlanner, PlanOut
 from repro.control.telemetry import (AmbientSample, AmbientSensor,
                                      ChipTempSample, EngineTelemetry,
                                      HeartbeatSample, MonitorTelemetry,
-                                     Snapshot, StepSample, StragglerSample,
-                                     TelemetryBus, TelemetrySource,
-                                     TickSample, UtilSample)
+                                     SdcSample, Snapshot, StepSample,
+                                     StragglerSample, TelemetryBus,
+                                     TelemetrySource, TickSample, UtilSample)
 
 __all__ = [
     # telemetry
     "TelemetrySource", "TelemetryBus", "Snapshot",
     "AmbientSensor", "EngineTelemetry", "MonitorTelemetry",
     "AmbientSample", "ChipTempSample", "StepSample", "TickSample",
-    "UtilSample", "StragglerSample", "HeartbeatSample",
+    "UtilSample", "StragglerSample", "HeartbeatSample", "SdcSample",
     # decisions
     "Controller", "LutController", "ControllerStats",
     "Action", "SetRails", "BoostRail", "Rebalance", "Throttle",
+    "RailBackoff", "Restore",
     # actuation
     "Actuator", "FleetActuator", "EngineActuator", "FleetReadout",
     # planning + loop

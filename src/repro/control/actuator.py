@@ -25,8 +25,8 @@ import numpy as np
 
 from repro.core import thermal
 from repro.core import tpu_fleet as TF
-from repro.control.controller import (Action, BoostRail, Rebalance, SetRails,
-                                      Throttle)
+from repro.control.controller import (Action, BoostRail, RailBackoff,
+                                      Rebalance, SetRails, Throttle)
 from repro.control.telemetry import ChipTempSample, Sample, Snapshot
 
 
@@ -68,6 +68,8 @@ class FleetActuator:
         self.boosted = set()  # chips pinned to boost rails (stragglers)
         self._boost_rails = {}  # chip -> (v_core, v_sram) boost override
         self.rebalance_log: List[Rebalance] = []
+        self.backoff_log: List[RailBackoff] = []  # §V SDC rail retreats
+        self.util_applied = np.ones(chips, np.float32)  # last settled util
         self.T = np.asarray(substrate.T0({"t_amb": t_amb}))
         self.readout: Optional[FleetReadout] = None
         self._nominal_cache = {}
@@ -107,6 +109,11 @@ class FleetActuator:
             self.boosted.discard(action.chip)
             self._boost_rails.pop(action.chip, None)
             return True
+        if isinstance(action, RailBackoff):
+            # the raised rails arrive in the same tick's SetRails; log the
+            # event (a real PMBus driver would also latch a fault counter)
+            self.backoff_log.append(action)
+            return True
         return False
 
     def release_boost(self, chip: int) -> None:
@@ -129,6 +136,7 @@ class FleetActuator:
             util = snap.util(chips)
         us = np.asarray(util if util is not None else np.ones(chips),
                         np.float32)
+        self.util_applied = us  # SDC telemetry reads the settled load
         m, n = self.substrate.grid
         T = self.T
         for _ in range(2):

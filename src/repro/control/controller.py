@@ -84,7 +84,27 @@ class Throttle:
     admit_cap: Optional[int]
 
 
-Action = Union[SetRails, BoostRail, Rebalance, Throttle]
+@dataclass(frozen=True)
+class RailBackoff:
+    """§V closed loop: the observed escaped-SDC rate exceeded the accuracy
+    budget — retreat the below-guard-band rails one 10 mV step (``steps``
+    is the cumulative retreat depth).  The adjusted rails ride in the same
+    tick's :class:`SetRails`; this action is the observable event the
+    actuators log."""
+    steps: int
+    rate: float
+    budget: float
+
+
+@dataclass(frozen=True)
+class Restore:
+    """Re-admit a cooled condemned chip: its work share migrates back
+    (the ``ElasticWorkAssignment.restore`` actuation)."""
+    chip: int
+
+
+Action = Union[SetRails, BoostRail, Rebalance, Throttle, RailBackoff,
+               Restore]
 
 
 @runtime_checkable
@@ -105,6 +125,8 @@ class ControllerStats:
     rebalances: int = 0
     throttles: int = 0
     unmapped: int = 0  # straggler events whose worker maps to no chip
+    backoffs: int = 0  # SDC-budget rail retreats (error-tolerant tier)
+    restores: int = 0  # cooled condemned chips re-admitted
     replan_reasons: List[str] = field(default_factory=list)
 
 
@@ -129,7 +151,12 @@ class LutController:
                  guard_band_c: float = 2.0,
                  util_band: float = 0.25,
                  t_headroom_c: float = 5.0,
-                 throttle_cap: int = 1):
+                 throttle_cap: int = 1,
+                 sdc_budget: Optional[float] = None,
+                 sdc_hysteresis: int = 3,
+                 backoff_step_v: float = 0.010,
+                 restore_after: Optional[int] = None,
+                 restore_below_c: float = 70.0):
         self.planner = planner
         if field is None and lut is None:
             lo, hi, n = sweep if sweep is not None else self.DEFAULT_SWEEP
@@ -145,12 +172,24 @@ class LutController:
         self.util_band = util_band
         self.t_headroom_c = t_headroom_c
         self.throttle_cap = throttle_cap
+        # error-tolerant tier (§V): back one rail step off when the sensed
+        # escaped-SDC rate exceeds the budget, re-descend one step per
+        # clean hysteresis window.  None disables (legacy behavior).
+        self.sdc_budget = sdc_budget
+        self.sdc_hysteresis = max(int(sdc_hysteresis), 1)
+        self.backoff_step_v = backoff_step_v
+        # hysteresis-based restore of cooled condemned chips; None disables
+        self.restore_after = restore_after
+        self.restore_below_c = restore_below_c
         self.stats = ControllerStats()
         self.plan: Optional[PlanOut] = None  # last full-solver plan
         self._t_prev: Optional[float] = None
         self._util_planned: Optional[np.ndarray] = None
         self._T_warm = None  # warm start for replans
         self._throttled = False
+        self._backoff = 0          # cumulative SDC rail-retreat steps
+        self._sdc_clean = 0        # consecutive within-budget ticks
+        self._cool: Dict[int, int] = {}  # condemned chip -> cool ticks
 
     # ------------------------------------------------------------------
     def reset(self) -> None:
@@ -164,6 +203,9 @@ class LutController:
         self._util_planned = None
         self._T_warm = None
         self._throttled = False
+        self._backoff = 0
+        self._sdc_clean = 0
+        self._cool = {}
         self.planner.T_last = None  # first replan restarts deterministic
 
     # ------------------------------------------------------------------
@@ -203,6 +245,23 @@ class LutController:
             # carries them (None otherwise: the legacy ambient-only tick)
             util = snap.util(self.planner.substrate.n_domains)
         actions: List[Action] = []
+        # §V error-tolerant tier: fold the observed escaped-SDC rate into
+        # the cumulative back-off depth BEFORE programming rails, so this
+        # tick's SetRails already carries the retreat.  One 10 mV step per
+        # over-budget tick; one step back down per clean hysteresis window.
+        if self.sdc_budget is not None and snap.sdc_checked > 0:
+            rate = snap.sdc_escaped / snap.sdc_checked
+            if rate > self.sdc_budget:
+                self._backoff = min(self._backoff + 1, 20)
+                self._sdc_clean = 0
+                self.stats.backoffs += 1
+                actions.append(RailBackoff(steps=self._backoff, rate=rate,
+                                           budget=self.sdc_budget))
+            elif self._backoff > 0:
+                self._sdc_clean += 1
+                if self._sdc_clean >= self.sdc_hysteresis:
+                    self._backoff -= 1
+                    self._sdc_clean = 0
         reason = self._replan_reason(snap, util)
         if reason is not None:
             plan, T = self.planner.plan_at(snap.t_amb, util, T0=self._T_warm)
@@ -212,15 +271,22 @@ class LutController:
             self.plan = plan
             self.stats.replans += 1
             self.stats.replan_reasons.append(reason)
-            actions.append(SetRails(plan.v_core, plan.v_sram,
-                                    source="solver", plan=plan))
+            vc, vs = plan.v_core, plan.v_sram
+            source, plan_out = "solver", plan
         else:
             if self.field is not None:
                 vc, vs = self.field.lookup(snap.t_amb, util)
             else:
                 vc, vs = self.lut.lookup(snap.t_amb)
             self.stats.lut_hits += 1
-            actions.append(SetRails(vc, vs, source="lut"))
+            source, plan_out = "lut", None
+        if self._backoff > 0:
+            dv = np.float32(self._backoff * self.backoff_step_v)
+            vc = np.minimum(np.asarray(vc, np.float32) + dv,
+                            np.float32(TF.V_CORE_NOM))
+            vs = np.minimum(np.asarray(vs, np.float32) + dv,
+                            np.float32(TF.V_SRAM_NOM))
+        actions.append(SetRails(vc, vs, source=source, plan=plan_out))
         self._t_prev = snap.t_amb
 
         # straggler policy: boost while nominal rails can hold the clock
@@ -256,6 +322,28 @@ class LutController:
             elif cool and self._throttled:
                 self._throttled = False
                 actions.append(Throttle(None))
+
+        # re-admit a condemned chip (share 0) once its junction stays under
+        # restore_below_c for restore_after consecutive ticks (cool-down
+        # hysteresis: one hot tick resets the counter).  Off by default —
+        # legacy replays keep the condemned chip condemned.
+        if (self.restore_after is not None and snap.shares is not None
+                and snap.t_chip is not None):
+            n = min(len(snap.shares), len(snap.t_chip))
+            for chip in range(n):
+                if snap.shares[chip] > 0.0:
+                    self._cool.pop(chip, None)
+                    continue
+                if float(snap.t_chip[chip]) >= self.restore_below_c:
+                    self._cool.pop(chip, None)
+                    continue
+                ticks = self._cool.get(chip, 0) + 1
+                if ticks >= self.restore_after:
+                    self._cool.pop(chip, None)
+                    self.stats.restores += 1
+                    actions.append(Restore(chip))
+                else:
+                    self._cool[chip] = ticks
         return actions
 
 

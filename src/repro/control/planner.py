@@ -78,7 +78,14 @@ class FleetPlanner:
         chips = self.substrate.n_domains
         us = np.asarray(util if util is not None else np.ones(chips),
                         np.float32)
-        return {"t_amb": t_amb, "util": us, "gamma": self.policy.gamma}
+        e = {"t_amb": t_amb, "util": us, "gamma": self.policy.gamma}
+        # budget-carrying policies (ErrorTolerant) ride their accuracy
+        # budget in the env so budget sweeps batch like gamma sweeps do;
+        # other policies keep the legacy env signature (stable jit keys)
+        b = getattr(self.policy, "budget", None)
+        if b is not None:
+            e["budget"] = float(b)
+        return e
 
     # ------------------------------------------------------------------
     def baseline_power(self, env: Dict, delta_t: Optional[float] = None,
@@ -175,11 +182,15 @@ class FleetPlanner:
                         np.float32)
         solver = pol.cached_solver(self.substrate, self.policy,
                                    self.delta_t, self.max_iters)
-        sol = solver.solve_batch({
+        envs = {
             "t_amb": t,
             "util": np.broadcast_to(us, (B, chips)).copy(),
             "gamma": np.full((B,), self.policy.gamma, np.float32),
-        })
+        }
+        b = getattr(self.policy, "budget", None)
+        if b is not None:
+            envs["budget"] = np.full((B,), float(b), np.float32)
+        sol = solver.solve_batch(envs)
         out = {}
         for i in range(B):
             vc, vs = self.substrate.decode(sol.idx[i])
@@ -201,11 +212,15 @@ class FleetPlanner:
         B = t.size * u.size
         tt = np.repeat(t, u.size)  # (B,)
         uu = np.tile(u, t.size)    # (B,)
-        return {
+        envs = {
             "t_amb": tt,
             "util": uu[:, None] * np.ones((1, chips), np.float32),
             "gamma": np.full((B,), self.policy.gamma, np.float32),
         }
+        b = getattr(self.policy, "budget", None)
+        if b is not None:
+            envs["budget"] = np.full((B,), float(b), np.float32)
+        return envs
 
     def rail_field(self, t_ambs, u_levels=DEFAULT_UTIL_KNOTS,
                    with_baseline: bool = True,

@@ -90,8 +90,19 @@ class HeartbeatSample:
     dead: FrozenSet[str]
 
 
+@dataclass(frozen=True)
+class SdcSample:
+    """One tick's ABFT SDC counters (from ``repro.tolerance.SdcTelemetry``
+    or a real checksum-counter readout): detected/corrected/escaped
+    injections over ``checked`` MACs of checksummed traffic."""
+    detected: int
+    corrected: int
+    escaped: int
+    checked: int
+
+
 Sample = Union[AmbientSample, ChipTempSample, StepSample, TickSample,
-               UtilSample, StragglerSample, HeartbeatSample]
+               UtilSample, StragglerSample, HeartbeatSample, SdcSample]
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +135,11 @@ class Snapshot:
     shares: Optional[np.ndarray] = None  # elastic per-chip work shares
     stragglers: List[StragglerSample] = field(default_factory=list)
     dead: FrozenSet[str] = frozenset()
+    # event-like ABFT SDC counters (summed over the tick's samples)
+    sdc_detected: int = 0
+    sdc_corrected: int = 0
+    sdc_escaped: int = 0
+    sdc_checked: int = 0
 
     # an idle pod still clocks (host traffic, refresh, collective keepalive):
     # the sensed load never folds below this floor
@@ -132,6 +148,14 @@ class Snapshot:
     @property
     def t_max(self) -> Optional[float]:
         return None if self.t_chip is None else float(np.max(self.t_chip))
+
+    @property
+    def sdc_rate(self) -> Optional[float]:
+        """Observed escaped-SDC rate per checked MAC this tick; None when
+        no checksummed traffic was sensed."""
+        if self.sdc_checked <= 0:
+            return None
+        return self.sdc_escaped / self.sdc_checked
 
     @property
     def load(self) -> Optional[float]:
@@ -174,6 +198,8 @@ class TelemetryBus:
         s.now = now
         s.stragglers = []
         s.tokens = 0
+        s.sdc_detected = s.sdc_corrected = 0
+        s.sdc_escaped = s.sdc_checked = 0
         for src in self.sources:
             for smp in src.poll(now):
                 if isinstance(smp, AmbientSample):
@@ -194,12 +220,21 @@ class TelemetryBus:
                     s.stragglers.append(smp)
                 elif isinstance(smp, HeartbeatSample):
                     s.dead = smp.dead
+                elif isinstance(smp, SdcSample):
+                    s.sdc_detected += smp.detected
+                    s.sdc_corrected += smp.corrected
+                    s.sdc_escaped += smp.escaped
+                    s.sdc_checked += smp.checked
         # hand the controller a stable copy; persistent state keeps arrays
         return Snapshot(now=s.now, t_amb=s.t_amb, t_chip=s.t_chip,
                         step_s=s.step_s, queued=s.queued, active=s.active,
                         tokens=s.tokens, tick_s=s.tick_s, slots=s.slots,
                         shares=s.shares,
-                        stragglers=list(s.stragglers), dead=s.dead)
+                        stragglers=list(s.stragglers), dead=s.dead,
+                        sdc_detected=s.sdc_detected,
+                        sdc_corrected=s.sdc_corrected,
+                        sdc_escaped=s.sdc_escaped,
+                        sdc_checked=s.sdc_checked)
 
 
 # ---------------------------------------------------------------------------

@@ -52,7 +52,8 @@ class EnergyAwareRuntime:
         # legacy string attribute ("power_save" | "min_energy" | "overscale")
         # honoured for Policy-object construction too
         _spec_names = {pol.Overscale: "overscale", pol.MinEnergy: "min_energy",
-                       pol.PowerSave: "power_save"}
+                       pol.PowerSave: "power_save",
+                       pol.ErrorTolerant: "error_tolerant"}
         self.policy = _spec_names.get(type(self.policy_obj),
                                       type(self.policy_obj).__name__)
         self.m, self.n = grid

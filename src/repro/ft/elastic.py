@@ -122,8 +122,8 @@ class ElasticWorkAssignment:
 
 
 class ElasticActuator:
-    """Control-plane adapter: consumes ``Rebalance`` actions, produces
-    ``UtilSample`` telemetry.
+    """Control-plane adapter: consumes ``Rebalance``/``Restore`` actions,
+    produces ``UtilSample`` telemetry.
 
     Implements both control protocols — ``Actuator.apply`` (a ``Rebalance``
     condemns the chip on the assignment) and ``TelemetrySource.poll`` (the
@@ -136,9 +136,13 @@ class ElasticActuator:
         self.log: List = []
 
     def apply(self, action) -> bool:
-        from repro.control.controller import Rebalance
+        from repro.control.controller import Rebalance, Restore
         if isinstance(action, Rebalance):
             self.assignment.condemn(action.chip)
+            self.log.append(action)
+            return True
+        if isinstance(action, Restore):
+            self.assignment.restore(action.chip)
             self.log.append(action)
             return True
         return False

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.abft_matmul import abft_matmul as _abft, checksum_refs
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.overscale_matmul import (bit_probs_to_cdf,
@@ -50,3 +51,9 @@ def thermal_sweep(T, P, diag, *, g_lat, g_v_tamb, iters=64, phase=None):
 
 def overscale_mm(a, b, u_gate, u_bit, cdf):
     return _omm(a, b, u_gate, u_bit, cdf, interpret=_interpret())
+
+
+def abft_mm(a, b, u_gate, u_bit, cdf):
+    """Error-injected int8 matmul with fused row/column checksums:
+    -> (c, rowsum, colsum)."""
+    return _abft(a, b, u_gate, u_bit, cdf, interpret=_interpret())

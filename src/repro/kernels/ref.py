@@ -2,6 +2,8 @@
 
 One reference per kernel, written with plain jnp ops (no pallas):
 - overscale_matmul_ref: int8 matmul + identical error-injection math
+- abft_matmul_ref: overscale_matmul_ref + row/column checksums of the
+  corrupted product (the ABFT syndromes' left-hand side)
 - thermal_stencil_ref: K Jacobi sweeps of the 5-point thermal stencil
 - flash_attention_ref: naive softmax(QK^T)V with causal mask
 - mamba_scan_ref: delegates to the model-level chunked SSD implementation
@@ -25,6 +27,13 @@ def overscale_matmul_ref(a, b, u_gate, u_bit, cdf):
     bit_idx = jnp.clip(bit_idx, 0, 31)
     mask = jnp.where(flip, jnp.left_shift(jnp.int32(1), bit_idx), 0)
     return jax.lax.bitwise_xor(acc, mask)
+
+
+def abft_matmul_ref(a, b, u_gate, u_bit, cdf):
+    """Oracle for kernels/abft_matmul: the error-injected product plus its
+    row/column checksums (int32, wrapping mod 2^32 like the kernel)."""
+    c = overscale_matmul_ref(a, b, u_gate, u_bit, cdf)
+    return c, jnp.sum(c, axis=1), jnp.sum(c, axis=0)
 
 
 def thermal_stencil_ref(T, P, diag, g_lat, g_v_tamb, iters: int,

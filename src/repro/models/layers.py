@@ -20,6 +20,25 @@ def cdt(cfg: ModelConfig):
     return jnp.dtype(cfg.dtype)
 
 
+# --- dense-matmul routing hook ------------------------------------------------
+
+#: optional override for the MXU-dominant dense matmuls (the MLP blocks):
+#: a callable ``(x_2d_f32, w_2d_f32) -> y_2d_f32``.  None keeps the plain
+#: ``@``.  Set via ``repro.tolerance.abft.routed_matmuls`` to run a model
+#: through the ABFT-checksummed over-scaled matmul; the override executes
+#: host-side state (SDC counters), so route only non-jitted evaluation.
+MATMUL = None
+
+
+def matmul(x, w):
+    """x: (..., K) @ w: (K, N), through the routing hook when installed."""
+    if MATMUL is None:
+        return x @ w
+    y = MATMUL(x.reshape(-1, x.shape[-1]).astype(jnp.float32),
+               w.astype(jnp.float32))
+    return y.reshape(*x.shape[:-1], w.shape[-1]).astype(x.dtype)
+
+
 # --- norms -------------------------------------------------------------------
 
 def norm_params(cfg: ModelConfig, dim: Optional[int] = None, logical="embed"):
@@ -67,15 +86,15 @@ def mlp_params(cfg: ModelConfig, d_ff: Optional[int] = None, ffn_logical="ffn"):
 def mlp_apply(p, x, cfg: ModelConfig, plan: Plan):
     dt = x.dtype
     if cfg.mlp_type == "swiglu":
-        g = x @ p["wg"].astype(dt)
-        u = x @ p["wu"].astype(dt)
+        g = matmul(x, p["wg"].astype(dt))
+        u = matmul(x, p["wu"].astype(dt))
         h = jax.nn.silu(g) * u
     elif cfg.mlp_type == "relu2":
-        h = jnp.square(jax.nn.relu(x @ p["wu"].astype(dt)))
+        h = jnp.square(jax.nn.relu(matmul(x, p["wu"].astype(dt))))
     else:
-        h = jax.nn.gelu(x @ p["wu"].astype(dt))
+        h = jax.nn.gelu(matmul(x, p["wu"].astype(dt)))
     h = plan.act(h, "batch", None, "ffn")
-    return h @ p["wd"].astype(dt)
+    return matmul(h, p["wd"].astype(dt))
 
 
 # --- embeddings ----------------------------------------------------------------

@@ -134,6 +134,25 @@ def _scan_blocks(stack_params, x, cfg, plan, block_fn):
             return (x, aux), None
         return (x, aux), a
 
+    if not cfg.scan_layers:
+        # unrolled python loop: same contract as the scan below, but the
+        # block body runs eagerly layer by layer — required when matmuls
+        # are routed through a host-side kernel (repro.tolerance ABFT),
+        # which cannot execute under a scan trace.
+        carry, states = (x, ZERO_AUX()), []
+        n = jax.tree_util.tree_leaves(stack_params)[0].shape[0]
+        for i in range(n):
+            layer_p = jax.tree_util.tree_map(lambda v: v[i], stack_params)
+            carry, s = body(carry, layer_p)
+            states.append(s)
+        x, aux = carry
+        if states and states[0] is not None:
+            states = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *states)
+        else:
+            states = None
+        return x, aux, states
+
     body = _maybe_remat(body, cfg)
     (x, aux), states = jax.lax.scan(body, (x, ZERO_AUX()), stack_params)
     return x, aux, states

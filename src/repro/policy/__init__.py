@@ -12,8 +12,10 @@ Legacy entry points (``core.voltage_scaling.run``, ``core.energy_opt.run``,
 ``core.overscaling.run``, ``core.runtime.EnergyAwareRuntime``) are thin
 wrappers over this API and keep their result dataclasses.
 """
-from repro.policy.policies import (MinEnergy, Overscale, Policy, PowerSave,
-                                   from_spec)
+from repro.policy.policies import (ABFT_ESCAPE, SDC_RATE0, SDC_RATE_K,
+                                   ErrorTolerant, MinEnergy, Overscale,
+                                   Policy, PowerSave, escaped_sdc_rate,
+                                   from_spec, overshoot_budget)
 from repro.policy.solver import Solution, Solver, cached_solver
 from repro.policy.substrate import (T_GUARD, V_BRAM_GRID, V_CORE_GRID,
                                     FpgaNetlistSubstrate, Substrate,
@@ -21,7 +23,9 @@ from repro.policy.substrate import (T_GUARD, V_BRAM_GRID, V_CORE_GRID,
                                     tpu_substrate)
 
 __all__ = [
-    "Policy", "PowerSave", "MinEnergy", "Overscale", "from_spec",
+    "Policy", "PowerSave", "MinEnergy", "Overscale", "ErrorTolerant",
+    "from_spec", "escaped_sdc_rate", "overshoot_budget",
+    "SDC_RATE0", "SDC_RATE_K", "ABFT_ESCAPE",
     "Solver", "Solution", "cached_solver",
     "Substrate", "FpgaNetlistSubstrate", "TpuFleetSubstrate",
     "fpga_substrate", "tpu_substrate",

@@ -20,15 +20,50 @@ Paper mapping (DESIGN.md §1):
 - :class:`MinEnergy`  — Algorithm 2 (§III-C): every candidate runs at its
   own maximum frequency ``f = f_nom * d_worst / delay`` (capped by the
   substrate); minimize energy ``P x exec_time(f)``.
+- :class:`ErrorTolerant` — §V: Algorithm 1 with the guard band replaced by
+  a workload-declared *accuracy budget*: rails below the guard band are
+  feasible whenever the predicted escaped-SDC rate behind the ABFT
+  checksums (``repro.tolerance``) fits the budget.  ``budget -> 0``
+  collapses to :class:`PowerSave` exactly (golden-pinned).
 
-``gamma`` is read from ``env`` when present so gamma-sweeps batch through
-``Solver.solve_batch`` as a single device call.
+``gamma`` (and ``budget`` for :class:`ErrorTolerant`) is read from ``env``
+when present so gamma/budget-sweeps batch through ``Solver.solve_batch``
+as a single device call.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import jax.numpy as jnp
+
+# --- §V escaped-SDC rate model ----------------------------------------------
+# Raw SDC rate per MAC at timing overshoot x = delay / d_worst - 1: zero at
+# or below the guard band, rising sharply past the critical point (the
+# reduced-voltage FPGA NN studies' measured shape — see PAPERS.md).  The
+# same constants parameterize the live injector (repro.tolerance.faults), so
+# the policy's prediction and the telemetry it is judged against agree.
+SDC_RATE0 = 2e-4   # per-MAC rate scale at the critical point
+SDC_RATE_K = 28.0  # sharpness of the rise past the critical point
+#: fraction of injected SDCs the ABFT row/column checksums cannot repair
+#: (multi-flip aliasing within one checksummed block)
+ABFT_ESCAPE = 0.02
+
+
+def escaped_sdc_rate(x):
+    """Predicted escaped-SDC rate per MAC behind ABFT at overshoot ``x``.
+
+    Traceable, monotone in ``x`` and exactly zero for ``x <= 0`` (rails at
+    or above the guard band inject nothing).
+    """
+    x = jnp.maximum(jnp.asarray(x, jnp.float32), 0.0)
+    return ABFT_ESCAPE * SDC_RATE0 * jnp.expm1(SDC_RATE_K * x)
+
+
+def overshoot_budget(budget):
+    """Inverse of :func:`escaped_sdc_rate`: the largest timing overshoot
+    whose predicted escaped rate still fits ``budget`` (0 at budget 0)."""
+    b = jnp.maximum(jnp.asarray(budget, jnp.float32), 0.0)
+    return jnp.log1p(b / (ABFT_ESCAPE * SDC_RATE0)) / SDC_RATE_K
 
 
 @dataclass(frozen=True)
@@ -91,9 +126,34 @@ class MinEnergy(Policy):
         return p * sub.exec_time(f)
 
 
+@dataclass(frozen=True)
+class ErrorTolerant(Policy):
+    """§V — Algorithm 1 under an accuracy budget instead of a guard band.
+
+    The timing constraint relaxes to ``delay <= (1 + x_max) * d_worst``
+    where ``x_max = overshoot_budget(budget)``: every admitted rail's
+    predicted escaped-SDC rate (what leaks past the ABFT checksums into
+    the workload) fits the declared budget.  The clock stays at the
+    contract — violations become bit errors the ``repro.tolerance`` tier
+    detects/corrects, not slowdown — so this is :class:`Overscale` with
+    gamma *derived from the error model* rather than hand-picked.
+
+    ``budget`` is read from ``env`` when present, so budget sweeps batch
+    through ``Solver.solve_batch`` as one device call.  ``budget=0`` gives
+    ``x_max=0`` and reproduces :class:`PowerSave` rails exactly.
+    """
+
+    budget: float = 0.0
+
+    def _gamma(self, env):
+        b = env.get("budget", jnp.asarray(self.budget, jnp.float32))
+        return 1.0 + overshoot_budget(b)
+
+
 def from_spec(spec) -> Policy:
     """Parse the CLI/runtime policy spec: 'power_save' | 'min_energy' |
-    'overscale:<gamma>' — or pass a Policy instance through unchanged."""
+    'overscale:<gamma>' | 'error_tolerant:<budget>' — or pass a Policy
+    instance through unchanged."""
     if isinstance(spec, Policy):
         return spec
     if spec == "power_save":
@@ -108,4 +168,12 @@ def from_spec(spec) -> Policy:
                 f"overscale spec needs a numeric gamma, e.g. "
                 f"'overscale:1.2'; got {spec!r}") from None
         return Overscale(gamma=gamma)
+    if spec.startswith("error_tolerant"):
+        try:
+            budget = (float(spec.split(":", 1)[1]) if ":" in spec else 0.0)
+        except ValueError:
+            raise ValueError(
+                f"error_tolerant spec needs a numeric escaped-SDC budget, "
+                f"e.g. 'error_tolerant:1e-5'; got {spec!r}") from None
+        return ErrorTolerant(budget=budget)
     raise ValueError(f"unknown energy policy spec: {spec!r}")

@@ -67,6 +67,9 @@ class Scenario:
     load: Optional[Callable[[float], float]] = None
     steps: Tuple[StepRecord, ...] = ()
     hotspots: Tuple[Hotspot, ...] = ()
+    # multiplicative SDC-rate disturbance trace (aging / supply-noise
+    # spikes) fed to the replay's FaultInjector; None = quiet day (x1)
+    sdc_noise: Optional[Callable[[float], float]] = None
     description: str = ""
 
     def ambient_at(self, tick: int) -> float:
@@ -159,12 +162,30 @@ def diurnal_load_spike(ticks: int = 48, base: float = 25.0,
         description="diurnal ambient + serving load spikes")
 
 
+def sdc_storm(ticks: int = 48, t_amb: float = 28.0, spike_at: int = 20,
+              spike_len: int = 6, spike_gain: float = 4.0) -> Scenario:
+    """The §V acceptance day: steady warm ambient with an SDC-noise spike
+    (aging / supply droop multiplying the raw flip rate by ``spike_gain``)
+    in the middle.  An ``ErrorTolerant`` closed loop rides below the guard
+    band all day — beating PowerSave on mean power — and the spike forces
+    the controller's ``RailBackoff`` retreat; the cumulative escaped-SDC
+    rate must still land inside the declared budget."""
+    def noise(now: float) -> float:
+        return spike_gain if spike_at <= now < spike_at + spike_len else 1.0
+
+    return Scenario(
+        name="sdc_storm", ticks=ticks,
+        ambient=lambda now: t_amb, sdc_noise=noise,
+        description=f"x{spike_gain} SDC-noise spike at tick {spike_at}")
+
+
 SCENARIOS: Dict[str, Callable[[], Scenario]] = {
     "diurnal": diurnal,
     "ambient_jump": ambient_jump,
     "straggler_storm": straggler_storm,
     "load_spike": load_spike,
     "diurnal_load_spike": diurnal_load_spike,
+    "sdc_storm": sdc_storm,
 }
 
 
@@ -207,6 +228,19 @@ class ReplayResult:
     shares: np.ndarray       # final elastic work shares (chips,)
     rails: np.ndarray        # (ticks, 2, chips) applied (v_core, v_sram)
     util_trace: np.ndarray   # (ticks, chips) utilization the loop settled at
+    # §V error-tolerance ledger (all zero on replays without an injector)
+    backoffs: int = 0
+    restores: int = 0
+    sdc_injected: int = 0
+    sdc_detected: int = 0
+    sdc_corrected: int = 0
+    sdc_escaped: int = 0
+    sdc_checked: int = 0
+
+    @property
+    def escape_rate(self) -> float:
+        """Cumulative escaped-SDC rate per checked MAC over the day."""
+        return self.sdc_escaped / self.sdc_checked if self.sdc_checked else 0.0
 
     @property
     def fingerprint(self) -> str:
@@ -223,7 +257,8 @@ class ReplayResult:
 def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
            = None, controller: Optional[ctl.LutController] = None,
            tick_s: float = 60.0, guard_band_c: float = 3.0,
-           sweep=(10.0, 45.0, 8), util_sweep=(0.25, 1.0, 4)) -> ReplayResult:
+           sweep=(10.0, 45.0, 8), util_sweep=(0.25, 1.0, 4),
+           injector=None) -> ReplayResult:
     """Run ``scenario`` through the full control loop; deterministic.
 
     ``controller=None`` builds the default RailField controller over the
@@ -231,6 +266,12 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
     (e.g. ``rt.controller(lut=rt.build_lut(...))`` for the scalar
     baseline).  ``tick_s`` converts the power readouts into the energy
     ledger (60 s control ticks by default).
+
+    ``injector`` (a ``repro.tolerance.FaultInjector``) attaches the §V SDC
+    loop: the injector is reset (same seed -> same replayed day), takes the
+    scenario's ``sdc_noise`` trace, and samples the fleet's applied rails
+    each tick through ``SdcTelemetry`` — pair it with a controller built
+    with ``sdc_budget=...`` to close the back-off loop.
     """
     rt = runtime if runtime is not None else RT.EnergyAwareRuntime(
         TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
@@ -252,8 +293,15 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
     fleet = ctl.FleetActuator.from_runtime(
         rt, t_amb=scenario.ambient_at(0),
         field=getattr(controller, "field", None))
-    bus = ctl.TelemetryBus([ctl.AmbientSensor(scenario.ambient),
-                            _LoadTelemetry(scenario), mon, elastic, fleet])
+    sources = [ctl.AmbientSensor(scenario.ambient),
+               _LoadTelemetry(scenario), mon, elastic, fleet]
+    if injector is not None:
+        from repro.tolerance.faults import SdcTelemetry
+        injector.reset()
+        if scenario.sdc_noise is not None:
+            injector.noise = scenario.sdc_noise
+        sources.append(SdcTelemetry(injector, fleet))
+    bus = ctl.TelemetryBus(sources)
     loop = ctl.ControlLoop(bus, controller, [fleet, elastic])
 
     # a reused controller (warm jits, shared field) must start the day
@@ -263,7 +311,7 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
         controller.reset()
     st = controller.stats
     base = (st.replans, st.lut_hits, st.boosts, st.rebalances,
-            len(st.replan_reasons))
+            len(st.replan_reasons), st.backoffs, st.restores)
 
     steps_by_tick: Dict[int, List[StepRecord]] = {}
     for rec in scenario.steps:
@@ -291,6 +339,7 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
         powers.append(ro.pod_power_w)
         t_maxes.append(ro.t_max)
 
+    tot = injector.totals if injector is not None else None
     return ReplayResult(
         name=scenario.name, ticks=scenario.ticks,
         replans=st.replans - base[0], lut_hits=st.lut_hits - base[1],
@@ -301,4 +350,10 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
         t_max=float(np.max(t_maxes)),
         condemned=tuple(sorted(assignment.condemned)),
         shares=assignment.shares.copy(),
-        rails=rails, util_trace=util_trace)
+        rails=rails, util_trace=util_trace,
+        backoffs=st.backoffs - base[5], restores=st.restores - base[6],
+        sdc_injected=tot.injected if tot else 0,
+        sdc_detected=tot.detected if tot else 0,
+        sdc_corrected=tot.corrected if tot else 0,
+        sdc_escaped=tot.escaped if tot else 0,
+        sdc_checked=tot.checked if tot else 0)

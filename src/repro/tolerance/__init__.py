@@ -1,0 +1,38 @@
+"""repro.tolerance — the §V error-tolerant over-scaling tier.
+
+The paper's third contribution: for workloads that tolerate a bounded
+amount of error, rails *below* the guard band convert the remaining thermal
+margin into power — provided the resulting timing-violation bit errors are
+detected, repaired, and fed back.  This package closes that loop
+(DESIGN.md §7):
+
+- :mod:`~repro.tolerance.faults` — a stochastic timing-error injector
+  parameterized by the live (v_core, v_sram, T) state of the fleet
+  substrate, generalizing ``core/overscaling.error_profile`` into a
+  per-tick model the control plane can query.  Calibrated so guard-band
+  rails (gamma = 1.0) inject nothing.
+- :mod:`~repro.tolerance.abft` — ABFT row/column-checksummed int8 matmul
+  (Pallas kernel in ``kernels/abft_matmul`` + jnp oracle in
+  ``kernels/ref``): detects SDCs online, corrects single flips, and
+  exports detect/correct/escape counters.
+- the :class:`repro.policy.ErrorTolerant` policy picks rails below the
+  guard band whenever the predicted escaped-SDC rate fits a declared
+  accuracy budget (same jitted Solver path; budget=0 == PowerSave).
+- control closure: :class:`SdcTelemetry` feeds
+  :class:`~repro.control.telemetry.SdcSample` counters to the bus; the
+  :class:`~repro.control.controller.LutController` backs rails off one
+  step when the observed escape rate exceeds the budget and re-descends
+  after a clean hysteresis window (``scenarios.sdc_storm`` replays the
+  whole day).
+"""
+from repro.tolerance.abft import (AbftCounters, AbftMatmul, checksum_refs,
+                                  detect_and_correct, routed_matmuls,
+                                  topk_agreement)
+from repro.tolerance.faults import (FaultInjector, SdcCounts, SdcTelemetry,
+                                    TimingFaultModel)
+
+__all__ = [
+    "TimingFaultModel", "FaultInjector", "SdcCounts", "SdcTelemetry",
+    "AbftCounters", "AbftMatmul", "checksum_refs", "detect_and_correct",
+    "routed_matmuls", "topk_agreement",
+]

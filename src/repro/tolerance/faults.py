@@ -1,0 +1,178 @@
+"""Live timing-fault model + stochastic SDC injector (§V).
+
+``core/overscaling.error_profile`` computes a *static* per-bit flip profile
+from an FPGA netlist's violating-path population.  The control plane needs
+the same physics as a *per-tick* function of the live fleet state: which
+rails are applied, how hot each chip is, how loaded it is.  This module is
+that generalization for the TPU substrate:
+
+- :class:`TimingFaultModel` — pure queries: per-chip timing overshoot
+  ``x = delay(v_core, v_sram, T + T_GUARD) / d_worst - 1`` (the depth of
+  undervolt past the step-time contract), the raw per-MAC SDC rate
+  ``SDC_RATE0 * expm1(SDC_RATE_K * x)`` (monotone in x, exactly zero at or
+  above the guard band — gamma = 1.0 rails inject nothing), and the
+  carry/MSB-concentrated per-bit flip profile the ABFT matmul consumes
+  (same CARRY_BITS/X_FULL tail shape as ``error_profile``).
+- :class:`FaultInjector` — seeded stochastic sampling of per-tick
+  (injected, detected, corrected, escaped) counts: Poisson injections at
+  the model rate over the tick's MAC traffic, binomial ABFT coverage
+  (``1 - ABFT_ESCAPE``).  Deterministic given the seed and call order, so
+  scenario replays fingerprint identically.
+- :class:`SdcTelemetry` — the control-plane adapter: polls the injector at
+  the :class:`~repro.control.actuator.FleetActuator`'s *applied* rails and
+  temperature field and emits an :class:`~repro.control.telemetry.SdcSample`
+  per control tick.
+
+The rate constants are shared with :mod:`repro.policy.policies` so the
+``ErrorTolerant`` policy's feasibility prediction and the telemetry that
+judges it agree by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core import tpu_fleet as TF
+from repro.policy.policies import ABFT_ESCAPE, SDC_RATE0, SDC_RATE_K
+from repro.policy.substrate import T_GUARD
+
+# carry-tail shape shared with core/overscaling.error_profile: a violation
+# of depth x corrupts the top ceil(x / X_FULL * CARRY_BITS) accumulator bits
+CARRY_BITS = 12
+X_FULL = 0.40
+
+
+@dataclass
+class TimingFaultModel:
+    """Per-chip timing-error physics at the live (v_core, v_sram, T)."""
+
+    lib: TF.TpuLibrary = field(default_factory=TF.TpuLibrary)
+    d_worst: float = 1.0  # the relative step-time contract
+
+    def overshoot(self, v_core, v_sram, T) -> np.ndarray:
+        """Depth of undervolt past the contract: (delay/d_worst - 1)+ at
+        the guarded temperature — 0 for rails the guard band admits."""
+        d = 1.0 / np.asarray(TF.f_max_rel(self.lib,
+                                          np.asarray(v_core, np.float32),
+                                          np.asarray(v_sram, np.float32),
+                                          np.asarray(T, np.float32)
+                                          + T_GUARD))
+        return np.maximum(d / self.d_worst - 1.0, 0.0)
+
+    def sdc_rate(self, v_core, v_sram, T, noise: float = 1.0) -> np.ndarray:
+        """Raw per-MAC SDC rate at the applied rails; ``noise`` is a
+        multiplicative disturbance (aging, supply noise — the sdc_storm
+        spike material)."""
+        x = self.overshoot(v_core, v_sram, T)
+        return noise * SDC_RATE0 * np.expm1(SDC_RATE_K * x)
+
+    def escaped_rate(self, v_core, v_sram, T, noise: float = 1.0):
+        """Predicted per-MAC rate that leaks past the ABFT checksums."""
+        return ABFT_ESCAPE * self.sdc_rate(v_core, v_sram, T, noise)
+
+    def bit_probs(self, v_core, v_sram, T, macs: int = 128,
+                  word_bits: int = 32) -> np.ndarray:
+        """Per-bit flip probability for one output element of a ``macs``-
+        deep accumulation — the profile ``kernels/abft_matmul`` (and
+        ``overscale_matmul``) consume.  Scalar rails/temperature: one
+        profile per operating point."""
+        x = float(np.max(self.overshoot(v_core, v_sram, T)))
+        probs = np.zeros(word_bits)
+        if x <= 0.0:
+            return probs
+        p_elem = min(float(np.max(self.sdc_rate(v_core, v_sram, T))) * macs,
+                     1.0)
+        depth = min(int(np.ceil(x / X_FULL * CARRY_BITS)), CARRY_BITS)
+        probs[word_bits - depth:] = p_elem / depth
+        return probs
+
+
+@dataclass
+class SdcCounts:
+    """One tick's (or one accumulated run's) SDC ledger."""
+    injected: int = 0
+    detected: int = 0
+    corrected: int = 0
+    escaped: int = 0
+    checked: int = 0  # MACs covered by the checksums this tick
+
+    def add(self, other: "SdcCounts") -> None:
+        self.injected += other.injected
+        self.detected += other.detected
+        self.corrected += other.corrected
+        self.escaped += other.escaped
+        self.checked += other.checked
+
+    @property
+    def escape_rate(self) -> float:
+        return self.escaped / self.checked if self.checked else 0.0
+
+
+class FaultInjector:
+    """Seeded per-tick SDC sampler at the applied rails.
+
+    ``tick`` draws Poisson injections per chip at the model's raw rate over
+    ``macs_per_tick`` MACs (scaled by per-chip utilization), then a
+    binomial ABFT repair with coverage ``1 - ABFT_ESCAPE``: what the
+    checksums catch is corrected, the aliasing residue escapes into the
+    workload.  Same seed + same call sequence -> same counts (replays
+    fingerprint identically); ``reset()`` restarts the stream.
+    """
+
+    def __init__(self, model: Optional[TimingFaultModel] = None,
+                 macs_per_tick: float = 1e9, seed: int = 0,
+                 noise: Optional[Callable[[float], float]] = None):
+        self.model = model if model is not None else TimingFaultModel()
+        self.macs_per_tick = float(macs_per_tick)
+        self.seed = int(seed)
+        self.noise = noise
+        self.rng = np.random.default_rng(self.seed)
+        self.totals = SdcCounts()
+
+    def reset(self, seed: Optional[int] = None) -> None:
+        if seed is not None:
+            self.seed = int(seed)
+        self.rng = np.random.default_rng(self.seed)
+        self.totals = SdcCounts()
+
+    def tick(self, now: float, v_core, v_sram, T,
+             util: Optional[np.ndarray] = None) -> SdcCounts:
+        noise = float(self.noise(now)) if self.noise is not None else 1.0
+        rate = self.model.sdc_rate(v_core, v_sram, T, noise)  # (chips,)
+        act = (np.ones_like(rate) if util is None
+               else np.asarray(util, np.float64))
+        lam = np.maximum(rate * act, 0.0) * self.macs_per_tick
+        injected = int(np.sum(self.rng.poisson(lam)))  # scalar rails OK
+        detected = (int(self.rng.binomial(injected, 1.0 - ABFT_ESCAPE))
+                    if injected else 0)
+        counts = SdcCounts(
+            injected=injected, detected=detected, corrected=detected,
+            escaped=injected - detected,
+            checked=int(round(float(act.sum()) * self.macs_per_tick)))
+        self.totals.add(counts)
+        return counts
+
+
+class SdcTelemetry:
+    """TelemetrySource: samples the injector at the fleet's applied state.
+
+    Reads the :class:`~repro.control.actuator.FleetActuator`'s applied
+    per-chip rails, last settled temperature field and utilization — the
+    natural one-tick sensor latency of a real SDC counter readout — and
+    emits one ``SdcSample`` per poll.
+    """
+
+    def __init__(self, injector: FaultInjector, fleet):
+        self.injector = injector
+        self.fleet = fleet
+
+    def poll(self, now: float) -> List:
+        from repro.control.telemetry import SdcSample
+        c = self.injector.tick(
+            now, self.fleet.v_core, self.fleet.v_sram,
+            np.asarray(self.fleet.T),
+            util=getattr(self.fleet, "util_applied", None))
+        return [SdcSample(detected=c.detected, corrected=c.corrected,
+                          escaped=c.escaped, checked=c.checked)]
