@@ -25,6 +25,7 @@ pre-refactor golden numbers (tests/test_policy_api.py).
 """
 from repro.control.actuator import (Actuator, EngineActuator, FleetActuator,
                                     FleetReadout)
+from repro.control.admission import AdmissionController, AdmissionStats
 from repro.control.controller import (Action, BoostRail, Controller,
                                       ControllerStats, LutController,
                                       RailBackoff, Rebalance, Restore,
@@ -48,6 +49,7 @@ __all__ = [
     "UtilSample", "StragglerSample", "HeartbeatSample", "SdcSample",
     # decisions
     "Controller", "LutController", "ControllerStats",
+    "AdmissionController", "AdmissionStats",
     "Action", "SetRails", "BoostRail", "Rebalance", "Throttle",
     "RailBackoff", "Restore",
     # actuation

@@ -66,6 +66,8 @@ class TickSample:
     tokens: int
     tick_s: float
     slots: int = 0
+    admitted: int = 0      # requests admitted this tick
+    oldest_wait: float = 0.0  # ticks the oldest queued request has waited
 
 
 @dataclass(frozen=True)
@@ -132,6 +134,8 @@ class Snapshot:
     tokens: int = 0
     tick_s: Optional[float] = None
     slots: int = 0
+    admitted: int = 0           # admissions since previous snapshot
+    oldest_wait: float = 0.0    # queue-head age [ticks] at latest sample
     shares: Optional[np.ndarray] = None  # elastic per-chip work shares
     stragglers: List[StragglerSample] = field(default_factory=list)
     dead: FrozenSet[str] = frozenset()
@@ -198,6 +202,7 @@ class TelemetryBus:
         s.now = now
         s.stragglers = []
         s.tokens = 0
+        s.admitted = 0
         s.sdc_detected = s.sdc_corrected = 0
         s.sdc_escaped = s.sdc_checked = 0
         for src in self.sources:
@@ -211,6 +216,8 @@ class TelemetryBus:
                 elif isinstance(smp, TickSample):
                     s.queued, s.active = smp.queued, smp.active
                     s.tokens += smp.tokens
+                    s.admitted += smp.admitted
+                    s.oldest_wait = smp.oldest_wait
                     s.tick_s = smp.tick_s
                     if smp.slots:
                         s.slots = smp.slots
@@ -229,6 +236,7 @@ class TelemetryBus:
         return Snapshot(now=s.now, t_amb=s.t_amb, t_chip=s.t_chip,
                         step_s=s.step_s, queued=s.queued, active=s.active,
                         tokens=s.tokens, tick_s=s.tick_s, slots=s.slots,
+                        admitted=s.admitted, oldest_wait=s.oldest_wait,
                         shares=s.shares,
                         stragglers=list(s.stragglers), dead=s.dead,
                         sdc_detected=s.sdc_detected,

@@ -1,8 +1,15 @@
 """Attention: GQA (qk-norm, sliding-window), MLA (+absorbed decode), cross-attn.
 
-KV caches are dicts of arrays with an explicit ``pos_ids`` vector so full and
-ring-buffer (sliding-window) caches share one masking rule:
-    valid(t) = 0 <= pos_ids[t] <= pos  and  pos_ids[t] > pos - window.
+KV caches are dicts of arrays with an explicit per-slot ``pos_ids`` table
+(``(B, T)``) so full and ring-buffer (sliding-window) caches share one
+masking rule, evaluated per batch row:
+    valid(b, t) = 0 <= pos_ids[b, t] <= pos[b]  and  pos_ids[b, t] > pos[b] - window.
+
+Decode is *ragged*: ``pos`` may be a scalar (the legacy slot-synchronous
+engine) or a ``(B,)`` vector of per-slot positions, and the new-token axis
+``S`` may exceed 1 (a chunked-prefill "extend" — each row appends up to S
+tokens at its own offset; ``n_valid`` marks how many are real, padded tails
+write ``pos_id = -1`` and stay invisible to the mask).
 """
 from __future__ import annotations
 
@@ -17,6 +24,32 @@ from repro.models.layers import apply_rope, rms_norm
 from repro.sharding.plan import Plan
 
 NEG_INF = -1e30
+
+
+def decode_positions(pos, B: int, S: int):
+    """Absolute query positions ``(B, S)`` from a scalar or ``(B,)`` pos."""
+    p = jnp.asarray(pos, jnp.int32)
+    if p.ndim == 0:
+        p = jnp.broadcast_to(p, (B,))
+    return p[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+
+
+def _row_update(arr, new, start):
+    """Write ``new`` (B,S,...) into ``arr`` (B,T,...) at per-row offsets."""
+    return jax.vmap(
+        lambda a, n, s: jax.lax.dynamic_update_slice_in_dim(a, n, s, axis=0)
+    )(arr, new.astype(arr.dtype), start)
+
+
+def _new_pos_ids(positions, n_valid):
+    """Position ids to record for an appended chunk: the absolute position,
+    or -1 (invalid) past each row's ``n_valid`` real tokens."""
+    if n_valid is None:
+        return positions
+    S = positions.shape[1]
+    keep = jnp.arange(S, dtype=jnp.int32)[None] < \
+        jnp.asarray(n_valid, jnp.int32)[:, None]
+    return jnp.where(keep, positions, -1)
 
 
 # =============================================================================
@@ -183,7 +216,7 @@ def gqa_cache_init(cfg: ModelConfig, plan: Plan, batch: int, max_len: int, dtype
     return {
         "k": jnp.zeros((batch, T, hkv, dh), dtype),
         "v": jnp.zeros((batch, T, hkv, dh), dtype),
-        "pos_ids": jnp.full((T,), -1, jnp.int32),
+        "pos_ids": jnp.full((batch, T), -1, jnp.int32),
     }
 
 
@@ -193,7 +226,7 @@ def gqa_cache_abstract(cfg: ModelConfig, plan: Plan, batch: int, max_len: int, d
     return {
         "k": jax.ShapeDtypeStruct((batch, T, hkv, dh), dtype),
         "v": jax.ShapeDtypeStruct((batch, T, hkv, dh), dtype),
-        "pos_ids": jax.ShapeDtypeStruct((T,), jnp.int32),
+        "pos_ids": jax.ShapeDtypeStruct((batch, T), jnp.int32),
     }
 
 
@@ -202,34 +235,46 @@ def gqa_cache_spec(plan: Plan, seq_axis=None):
     kvh = plan.rules.get("kv_heads")
     from jax.sharding import PartitionSpec as P
     return {"k": P(b, seq_axis, kvh, None), "v": P(b, seq_axis, kvh, None),
-            "pos_ids": P(seq_axis)}
+            "pos_ids": P(b, seq_axis)}
 
 
-def gqa_decode(p, x, cache, pos, cfg: ModelConfig, plan: Plan):
-    """One-token decode. x:(B,1,D); pos: scalar int32 current position."""
-    B = x.shape[0]
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig, plan: Plan, n_valid=None):
+    """Ragged decode/extend. x:(B,S,D); pos: scalar or (B,) per-slot position.
+
+    Appends S new tokens per row at that row's own offset (ring-modded for
+    sliding-window caches). ``n_valid`` (B,) optionally marks how many of the
+    S tokens are real per row; padded tails record ``pos_id = -1``.
+    """
+    B, S, _ = x.shape
     q, k_new, v_new = _qkv(p, x, x, cfg, plan)
-    q = apply_rope(q, jnp.full((1, 1), pos), cfg)
-    k_new = apply_rope(k_new, jnp.full((1, 1), pos), cfg)
+    positions = decode_positions(pos, B, S)  # (B,S)
+    q = apply_rope(q, positions, cfg)
+    k_new = apply_rope(k_new, positions, cfg)
     T = cache["k"].shape[1]
-    slot = pos % T  # ring for SWA; == pos when T == max_len
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
-    pos_ids = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos_ids"], jnp.array([pos], jnp.int32) * jnp.ones((1,), jnp.int32),
-        slot, axis=0)
-    valid = (pos_ids >= 0) & (pos_ids <= pos)
+    start = positions[:, 0] % T  # ring for SWA; == pos when T == max_len
+    ids = _new_pos_ids(positions, n_valid)
+    k = _row_update(cache["k"], k_new, start)
+    v = _row_update(cache["v"], v_new, start)
+    pos_ids = _row_update(cache["pos_ids"], ids, start)  # (B,T)
+    valid = (pos_ids >= 0)[:, None, :] & \
+        (pos_ids[:, None, :] <= positions[..., None])
     if cfg.sliding_window:
-        valid &= pos_ids > pos - cfg.sliding_window
-    mask = valid[None, None, None, None, :]
+        valid &= pos_ids[:, None, :] > positions[..., None] - cfg.sliding_window
+    mask = valid[:, None, None]  # (B,1,1,S,T)
     o = _sdpa(q, k, v, mask, plan)
     o = jnp.einsum("bshd,hdk->bsk", o, p["wo"].astype(x.dtype))
     return o, {"k": k, "v": v, "pos_ids": pos_ids}
 
 
-def gqa_seed_cache(cache, kv, prefill_len: int):
-    """Write prefill-time K/V into a decode cache (assumes full, non-ring)."""
+def gqa_seed_cache(cache, kv, prefill_len: int, lengths=None):
+    """Write prefill-time K/V into a decode cache (assumes full, non-ring).
+
+    ``lengths`` (B,) optionally marks per-row true prompt lengths for
+    right-padded batched prefill: positions past a row's length record
+    ``pos_id = -1`` so they stay invisible to the decode mask.
+    """
     k, v = kv
+    B = k.shape[0]
     T = cache["k"].shape[1]
     S = k.shape[1]
     if S > T:  # sliding-window cache shorter than prefill: keep the tail
@@ -238,10 +283,15 @@ def gqa_seed_cache(cache, kv, prefill_len: int):
         S = T
     else:
         pos = jnp.arange(S, dtype=jnp.int32)
+    pos2 = jnp.broadcast_to(pos[None], (B, S))
+    if lengths is not None:
+        pos2 = jnp.where(pos2 < jnp.asarray(lengths, jnp.int32)[:, None],
+                         pos2, -1)
     out = {
         "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
         "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1),
-        "pos_ids": jax.lax.dynamic_update_slice_in_dim(cache["pos_ids"], pos, 0, 0),
+        "pos_ids": jax.lax.dynamic_update_slice(
+            cache["pos_ids"], pos2, (0, 0)),
     }
     return out
 
@@ -326,8 +376,8 @@ def mla_cache_init(cfg, plan, batch, max_len, dtype, abstract=False):
     return {
         "c_kv": mk((batch, max_len, cfg.kv_lora_rank), dtype),
         "k_rope": mk((batch, max_len, cfg.qk_rope_head_dim), dtype),
-        "pos_ids": (jax.ShapeDtypeStruct((max_len,), jnp.int32) if abstract
-                    else jnp.full((max_len,), -1, jnp.int32)),
+        "pos_ids": (jax.ShapeDtypeStruct((batch, max_len), jnp.int32) if abstract
+                    else jnp.full((batch, max_len), -1, jnp.int32)),
     }
 
 
@@ -335,43 +385,53 @@ def mla_cache_spec(plan: Plan, seq_axis=None):
     from jax.sharding import PartitionSpec as P
     b = plan.batch_axes
     return {"c_kv": P(b, seq_axis, None), "k_rope": P(b, seq_axis, None),
-            "pos_ids": P(seq_axis)}
+            "pos_ids": P(b, seq_axis)}
 
 
-def mla_decode(p, x, cache, pos, cfg: ModelConfig, plan: Plan):
-    """Absorbed decode: score directly against compressed cache (TPU-native)."""
-    B = x.shape[0]
+def mla_decode(p, x, cache, pos, cfg: ModelConfig, plan: Plan, n_valid=None):
+    """Absorbed decode: score directly against compressed cache (TPU-native).
+
+    Ragged like :func:`gqa_decode`: ``pos`` scalar or (B,), S >= 1, per-row
+    append at each row's own offset (full-length cache, no ring).
+    """
+    B, S, _ = x.shape
     dt = x.dtype
     nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
-    positions = jnp.full((1, 1), pos)
-    q_nope, q_rope = _mla_q(p, x, cfg, positions)  # (B,1,H,nope/rope)
-    c_new, kr_new = _mla_ckv(p, x, cfg, positions)  # (B,1,r), (B,1,rope)
-    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, pos, 1)
-    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new, pos, 1)
-    pos_ids = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos_ids"], jnp.array([pos], jnp.int32), pos, 0)
-    # absorb k_up into q: (B,1,H,r)
+    positions = decode_positions(pos, B, S)  # (B,S)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)  # (B,S,H,nope/rope)
+    c_new, kr_new = _mla_ckv(p, x, cfg, positions)  # (B,S,r), (B,S,rope)
+    start = positions[:, 0]
+    c_kv = _row_update(cache["c_kv"], c_new, start)
+    k_rope = _row_update(cache["k_rope"], kr_new, start)
+    pos_ids = _row_update(cache["pos_ids"], _new_pos_ids(positions, n_valid),
+                          start)  # (B,T)
+    # absorb k_up into q: (B,S,H,r)
     q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["k_up"].astype(dt))
     scores = (jnp.einsum("bshr,btr->bhst", q_c, c_kv,
                          preferred_element_type=jnp.float32)
               + jnp.einsum("bshk,btk->bhst", q_rope, k_rope,
                            preferred_element_type=jnp.float32))
     scores = scores / jnp.sqrt(nope + rope_d).astype(jnp.float32)
-    valid = (pos_ids >= 0) & (pos_ids <= pos)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    valid = (pos_ids >= 0)[:, None, :] & \
+        (pos_ids[:, None, :] <= positions[..., None])  # (B,S,T)
+    scores = jnp.where(valid[:, None], scores, NEG_INF)  # (B,H,S,T)
     w = jax.nn.softmax(scores, -1).astype(dt)
-    ctx_c = jnp.einsum("bhst,btr->bshr", w, c_kv)  # (B,1,H,r)
+    ctx_c = jnp.einsum("bhst,btr->bshr", w, c_kv)  # (B,S,H,r)
     o = jnp.einsum("bshr,rhk->bshk", ctx_c, p["v_up"].astype(dt))  # absorbed v_up
     o = jnp.einsum("bshd,hdk->bsk", o, p["wo"].astype(dt))
     return o, {"c_kv": c_kv, "k_rope": k_rope, "pos_ids": pos_ids}
 
 
-def mla_seed_cache(cache, kv, prefill_len: int):
+def mla_seed_cache(cache, kv, prefill_len: int, lengths=None):
     c_kv, k_rope = kv
-    S = c_kv.shape[1]
+    B, S = c_kv.shape[0], c_kv.shape[1]
     pos = jnp.arange(S, dtype=jnp.int32)
+    pos2 = jnp.broadcast_to(pos[None], (B, S))
+    if lengths is not None:
+        pos2 = jnp.where(pos2 < jnp.asarray(lengths, jnp.int32)[:, None],
+                         pos2, -1)
     return {
         "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, 0, 1),
         "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, 0, 1),
-        "pos_ids": jax.lax.dynamic_update_slice_in_dim(cache["pos_ids"], pos, 0, 0),
+        "pos_ids": jax.lax.dynamic_update_slice(cache["pos_ids"], pos2, (0, 0)),
     }

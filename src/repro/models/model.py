@@ -59,24 +59,33 @@ class Model:
         return tf.lm_apply(params, tokens, cfg, plan)
 
     # --- serving ------------------------------------------------------------
-    def prefill(self, params, batch: Dict[str, Any], max_len: Optional[int] = None):
+    def prefill(self, params, batch: Dict[str, Any], max_len: Optional[int] = None,
+                lengths=None):
         cfg, plan = self.cfg, self.plan
         tokens = batch["tokens"]
         if cfg.family == "vlm":
             return mm.vlm_prefill(params, tokens, batch["image_embeds"], cfg,
-                                  plan, max_len)
+                                  plan, max_len, lengths=lengths)
         if cfg.family == "audio":
             return mm.whisper_prefill(params, tokens, batch["audio_frames"],
-                                      cfg, plan, max_len)
-        return tf.lm_prefill(params, tokens, cfg, plan, max_len)
+                                      cfg, plan, max_len, lengths=lengths)
+        return tf.lm_prefill(params, tokens, cfg, plan, max_len, lengths=lengths)
 
-    def decode(self, params, tokens, cache, pos):
+    def decode(self, params, tokens, cache, pos, n_valid=None):
+        """Ragged decode: ``pos`` scalar or (B,) per-slot; tokens (B,S), S>=1.
+
+        ``n_valid`` (B,) marks real tokens per row for chunked-prefill
+        extends (attention families; SSM/hybrid state ignores it).
+        """
         cfg, plan = self.cfg, self.plan
         if cfg.family == "vlm":
-            return mm.vlm_decode(params, tokens, cache, pos, cfg, plan)
+            return mm.vlm_decode(params, tokens, cache, pos, cfg, plan,
+                                 n_valid=n_valid)
         if cfg.family == "audio":
-            return mm.whisper_decode(params, tokens, cache, pos, cfg, plan)
-        return tf.lm_decode(params, tokens, cache, pos, cfg, plan)
+            return mm.whisper_decode(params, tokens, cache, pos, cfg, plan,
+                                     n_valid=n_valid)
+        return tf.lm_decode(params, tokens, cache, pos, cfg, plan,
+                            n_valid=n_valid)
 
     # --- caches ---------------------------------------------------------------
     def cache(self, batch_size: int, max_len: int, abstract: bool = False):

@@ -100,7 +100,7 @@ def vlm_apply(params, tokens, image_embeds, cfg: ModelConfig, plan: Plan):
 
 
 def vlm_prefill(params, tokens, image_embeds, cfg, plan,
-                max_len: Optional[int] = None):
+                max_len: Optional[int] = None, lengths=None):
     B, S = tokens.shape
     max_len = max_len or S
     dtype = L.cdt(cfg)
@@ -124,7 +124,8 @@ def vlm_prefill(params, tokens, image_embeds, cfg, plan,
         (params["blocks"]["groups"], params["blocks"]["cross"]))
     cache = {
         "self": jax.vmap(jax.vmap(
-            lambda kv: _seed_attn_cache(cfg, plan, kv, max_len, dtype, B)))(kvs),
+            lambda kv: _seed_attn_cache(cfg, plan, kv, max_len, dtype, B,
+                                        lengths)))(kvs),
         "cross": {"k": ckvs[0], "v": ckvs[1]},
     }
     x = L.norm_apply(params["final_ln"], x, cfg)
@@ -173,7 +174,8 @@ def vlm_cache_specs(cfg, plan, seq_axis=None):
     }
 
 
-def vlm_decode(params, tokens, cache, pos, cfg: ModelConfig, plan: Plan):
+def vlm_decode(params, tokens, cache, pos, cfg: ModelConfig, plan: Plan,
+               n_valid=None):
     x = L.embed_apply(params["embed"], tokens, cfg, plan)
 
     def group_body(x, pc):
@@ -181,7 +183,8 @@ def vlm_decode(params, tokens, cache, pos, cfg: ModelConfig, plan: Plan):
 
         def inner(x, plc):
             lp, lc = plc
-            x, lc = attn_block_decode(lp, x, lc, pos, cfg, plan)
+            x, lc = attn_block_decode(lp, x, lc, pos, cfg, plan,
+                                      n_valid=n_valid)
             return x, lc
 
         x, sc = jax.lax.scan(inner, x, (sp, sc))
@@ -275,7 +278,7 @@ def whisper_apply(params, tokens, frames, cfg: ModelConfig, plan: Plan):
 
 
 def whisper_prefill(params, tokens, frames, cfg, plan,
-                    max_len: Optional[int] = None):
+                    max_len: Optional[int] = None, lengths=None):
     B, S = tokens.shape
     max_len = max_len or S
     dtype = L.cdt(cfg)
@@ -290,7 +293,8 @@ def whisper_prefill(params, tokens, frames, cfg, plan,
     x, (kvs, ckvs) = jax.lax.scan(_maybe_remat(body, cfg), x, params["dec"])
     cache = {
         "self": jax.vmap(
-            lambda kv: _seed_attn_cache(cfg, plan, kv, max_len, dtype, B))(kvs),
+            lambda kv: _seed_attn_cache(cfg, plan, kv, max_len, dtype, B,
+                                        lengths))(kvs),
         "cross": {"k": ckvs[0], "v": ckvs[1]},
     }
     x = L.norm_apply(params["final_ln"], x, cfg)
@@ -333,14 +337,17 @@ def whisper_cache_specs(cfg, plan, seq_axis=None):
     }
 
 
-def whisper_decode(params, tokens, cache, pos, cfg: ModelConfig, plan: Plan):
+def whisper_decode(params, tokens, cache, pos, cfg: ModelConfig, plan: Plan,
+                   n_valid=None):
+    B, S = tokens.shape
     x = L.embed_apply(params["embed"], tokens, cfg, plan)
-    x = x + _sin_at(pos, cfg, x.dtype)
+    x = x + _sin_at(attn.decode_positions(pos, B, S), cfg, x.dtype)
 
     def body(x, pc):
         lp, (sc, cc) = pc
         h = L.norm_apply(lp["ln1"], x, cfg)
-        a, sc = attn.gqa_decode(lp["self_attn"], h, sc, pos, cfg, plan)
+        a, sc = attn.gqa_decode(lp["self_attn"], h, sc, pos, cfg, plan,
+                                n_valid=n_valid)
         x = x + a
         h = L.norm_apply(lp["ln_x"], x, cfg)
         dt = x.dtype
@@ -359,8 +366,10 @@ def whisper_decode(params, tokens, cache, pos, cfg: ModelConfig, plan: Plan):
     return L.unembed_apply(params["embed"], x, cfg, plan), cache
 
 
-def _sin_at(pos, cfg, dtype):
+def _sin_at(positions, cfg, dtype):
+    """Sinusoidal embedding at absolute ``positions`` (B,S) -> (B,S,d)."""
     d = cfg.d_model
     i = jnp.arange(d // 2).astype(jnp.float32)
-    ang = jnp.asarray(pos, jnp.float32) / jnp.power(10000.0, 2 * i / d)
-    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)[None, None]
+    ang = jnp.asarray(positions, jnp.float32)[..., None] / \
+        jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)

@@ -69,12 +69,14 @@ def attn_block_apply(p, x, cfg, plan, positions=None, collect_kv=False):
     return (x, aux, kv) if collect_kv else (x, aux)
 
 
-def attn_block_decode(p, x, cache, pos, cfg, plan):
+def attn_block_decode(p, x, cache, pos, cfg, plan, n_valid=None):
     h = L.norm_apply(p["ln1"], x, cfg)
     if cfg.attn_type == "mla":
-        a, cache = attn.mla_decode(p["attn"], h, cache, pos, cfg, plan)
+        a, cache = attn.mla_decode(p["attn"], h, cache, pos, cfg, plan,
+                                   n_valid=n_valid)
     else:
-        a, cache = attn.gqa_decode(p["attn"], h, cache, pos, cfg, plan)
+        a, cache = attn.gqa_decode(p["attn"], h, cache, pos, cfg, plan,
+                                   n_valid=n_valid)
     x = x + a
     h = L.norm_apply(p["ln2"], x, cfg)
     if "moe" in p:
@@ -316,18 +318,24 @@ def lm_cache_specs(cfg: ModelConfig, plan: Plan, seq_axis=None):
 # prefill: full forward that also seeds the decode cache
 # =============================================================================
 
-def _seed_attn_cache(cfg, plan, kv, max_len, dtype, batch):
+def _seed_attn_cache(cfg, plan, kv, max_len, dtype, batch, lengths=None):
     """Build a seeded per-layer cache directly from prefill K/V."""
     if cfg.attn_type == "mla":
         zero = attn.mla_cache_init(cfg, plan, batch, max_len, dtype)
-        return attn.mla_seed_cache(zero, kv, kv[0].shape[1])
+        return attn.mla_seed_cache(zero, kv, kv[0].shape[1], lengths=lengths)
     zero = attn.gqa_cache_init(cfg, plan, batch, max_len, dtype)
-    return attn.gqa_seed_cache(zero, kv, kv[0].shape[1])
+    return attn.gqa_seed_cache(zero, kv, kv[0].shape[1], lengths=lengths)
 
 
 def lm_prefill(params, tokens, cfg: ModelConfig, plan: Plan,
-               max_len: Optional[int] = None):
-    """tokens:(B,S) -> (logits, seeded cache with capacity max_len or S)."""
+               max_len: Optional[int] = None, lengths=None):
+    """tokens:(B,S) -> (logits, seeded cache with capacity max_len or S).
+
+    ``lengths`` (B,) marks per-row true prompt lengths when the batch is
+    right-padded: cache positions past a row's length record ``pos_id = -1``
+    (attention families only — SSM/hybrid recurrent state has no position
+    table, so ragged prefill there must run per-request at exact length).
+    """
     B, S = tokens.shape
     max_len = max_len or S
     dtype = L.cdt(cfg)
@@ -338,7 +346,8 @@ def lm_prefill(params, tokens, cfg: ModelConfig, plan: Plan,
         for i in range(cfg.first_k_dense):
             x, _, kv = attn_block_apply(params["blocks"][f"dense{i}"], x, cfg,
                                         plan, collect_kv=True)
-            cache[f"dense{i}"] = _seed_attn_cache(cfg, plan, kv, max_len, dtype, B)
+            cache[f"dense{i}"] = _seed_attn_cache(cfg, plan, kv, max_len,
+                                                  dtype, B, lengths)
 
         def body(carry, lp):
             x = carry
@@ -348,7 +357,8 @@ def lm_prefill(params, tokens, cfg: ModelConfig, plan: Plan,
         x, kvs = jax.lax.scan(_maybe_remat(body, cfg), x,
                               params["blocks"]["stack"])
         cache["stack"] = jax.vmap(
-            lambda kv: _seed_attn_cache(cfg, plan, kv, max_len, dtype, B))(kvs)
+            lambda kv: _seed_attn_cache(cfg, plan, kv, max_len, dtype, B,
+                                        lengths))(kvs)
     elif cfg.family == "ssm":
         def body(carry, lp):
             x, st = ssm_block_apply(lp, carry, cfg, plan)
@@ -376,7 +386,8 @@ def lm_prefill(params, tokens, cfg: ModelConfig, plan: Plan,
             _maybe_remat(group_body, cfg), x, bp["groups"])
         cache["groups"] = g_states
         cache["shared_attn"] = jax.vmap(
-            lambda kv: _seed_attn_cache(cfg, plan, kv, max_len, dtype, B))(g_kvs)
+            lambda kv: _seed_attn_cache(cfg, plan, kv, max_len, dtype, B,
+                                        lengths))(g_kvs)
         if bp["tail"]:
             def inner(c, lp):
                 c, st = ssm_block_apply(lp, c, cfg, plan)
@@ -395,18 +406,26 @@ def lm_prefill(params, tokens, cfg: ModelConfig, plan: Plan,
 # decode step
 # =============================================================================
 
-def lm_decode(params, tokens, cache, pos, cfg: ModelConfig, plan: Plan):
-    """tokens:(B,1) -> logits:(B,1,V); functional cache update."""
+def lm_decode(params, tokens, cache, pos, cfg: ModelConfig, plan: Plan,
+              n_valid=None):
+    """tokens:(B,S) -> logits:(B,S,V); functional cache update.
+
+    ``pos`` may be a scalar or a (B,) vector of per-slot positions, and S may
+    exceed 1 (chunked-prefill extend, attention families); ``n_valid`` (B,)
+    marks real tokens per row for ragged extends.
+    """
     x = L.embed_apply(params["embed"], tokens, cfg, plan)
 
     if cfg.family in ("dense", "moe"):
         for i in range(cfg.first_k_dense):
             x, cache[f"dense{i}"] = attn_block_decode(
-                params["blocks"][f"dense{i}"], x, cache[f"dense{i}"], pos, cfg, plan)
+                params["blocks"][f"dense{i}"], x, cache[f"dense{i}"], pos, cfg,
+                plan, n_valid=n_valid)
 
         def body(x, pc):
             lp, lc = pc
-            x, lc = attn_block_decode(lp, x, lc, pos, cfg, plan)
+            x, lc = attn_block_decode(lp, x, lc, pos, cfg, plan,
+                                      n_valid=n_valid)
             return x, lc
 
         x, new_stack = jax.lax.scan(
@@ -433,7 +452,8 @@ def lm_decode(params, tokens, cache, pos, cfg: ModelConfig, plan: Plan):
                 return x, lc
 
             x, gc = jax.lax.scan(inner, x, (gp, gc))
-            x, ac = attn_block_decode(bp["shared_attn"], x, ac, pos, cfg, plan)
+            x, ac = attn_block_decode(bp["shared_attn"], x, ac, pos, cfg, plan,
+                                      n_valid=n_valid)
             return x, (gc, ac)
 
         x, (new_groups, new_attn) = jax.lax.scan(

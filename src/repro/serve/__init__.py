@@ -1,0 +1,13 @@
+"""Production serving tier: paged KV-cache manager + continuous batching.
+
+See DESIGN.md §8.  ``Engine`` is the scheduler loop; ``KVCacheManager`` owns
+slots/pages/positions; ``repro.control.AdmissionController`` co-schedules
+admission with the rail plan.
+"""
+from repro.serve.cache import ExpandableKVCacheManager, KVCacheManager
+from repro.serve.engine import Engine, Request
+from repro.serve.scheduler import SlotWork, TickPlan, compose
+from repro.serve.step import sample
+
+__all__ = ["Engine", "Request", "KVCacheManager", "ExpandableKVCacheManager",
+           "SlotWork", "TickPlan", "compose", "sample"]

@@ -1,0 +1,207 @@
+"""Paged KV-cache management for the continuous-batching engine.
+
+``KVCacheManager`` owns the decode-cache pytree for a fixed set of slots and
+all per-slot bookkeeping the scheduler needs:
+
+- **per-slot positions** — ``pos[slot]`` is each slot's next decode position;
+  there is no global aligned position, so requests at different depths share
+  one fused decode step (the ragged ``pos``/``n_valid`` contract of
+  ``Model.decode``).
+- **slot recycling** — freeing a slot returns its pages to the pool and
+  invalidates its ``pos_ids`` rows; the arrays are allocated once, so cache
+  memory never grows with request count.
+- **page accounting** — capacity is tracked in fixed-size pages
+  (``page_size`` tokens); ``pages_in_use``/``peak_pages`` expose occupancy to
+  the admission controller the way a paged allocator would, without the
+  gather overhead of real block tables (the reduced configs are far from
+  HBM-bound).
+- **batch-axis probing** — the cache pytree mixes leaf ranks (attention K/V,
+  SSM conv/ssm states, cross-attn K/V, stacked layer dims), so the manager
+  finds each leaf's batch axis *structurally*: build the abstract cache at
+  two batch sizes and diff the shapes. Scatter/gather then move that axis to
+  the front — no shape-matching heuristics (which break when a layer count
+  equals the slot count).
+
+``ExpandableKVCacheManager`` (modeled on foundation-model-stack's
+ExpandableKVCacheManager) starts with a small sequence capacity and doubles
+it on demand up to ``max_len``: sequence axes are probed the same way, new
+space is zero-filled except ``pos_ids`` (filled with -1 = invalid).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+NO_AXIS = -1  # sentinel: None leaves would vanish from the pytree
+
+
+def _probe_axes(model, make_a, make_b):
+    """Per-leaf axis where two abstract cache builds disagree (else NO_AXIS)."""
+    a = make_a()
+    b = make_b()
+
+    def diff(x, y):
+        for i, (p, q) in enumerate(zip(x.shape, y.shape)):
+            if p != q:
+                return i
+        return NO_AXIS
+
+    return jax.tree_util.tree_map(diff, a, b)
+
+
+def _is_pos_ids(path) -> bool:
+    for p in path:
+        if getattr(p, "key", None) == "pos_ids":
+            return True
+    return False
+
+
+class KVCacheManager:
+    """Fixed-capacity paged cache over ``slots`` rows of length ``max_len``."""
+
+    def __init__(self, model, slots: int, max_len: int,
+                 page_size: int = 16, alloc: bool = True):
+        self.model = model
+        self.slots = slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.batch_axes = _probe_axes(
+            model,
+            lambda: model.cache(slots, max_len, abstract=True),
+            lambda: model.cache(slots + 1, max_len, abstract=True))
+        if alloc:
+            self.cache = model.cache(slots, max_len)
+        # host-side bookkeeping (no device sync needed to schedule)
+        self.pos = np.zeros(slots, np.int32)        # next decode position
+        self.lengths = np.zeros(slots, np.int32)    # prompt length
+        self._free: List[int] = list(range(slots))
+        self._pages_per_slot = math.ceil(max_len / page_size)
+        self.peak_pages = 0
+
+        def _scatter(cache, rows, slot_ids):
+            def put(ax, ec, pc):
+                if ax == NO_AXIS:
+                    return ec
+                ecm = jnp.moveaxis(ec, ax, 0)
+                pcm = jnp.moveaxis(pc, ax, 0)
+                ecm = ecm.at[slot_ids].set(pcm.astype(ecm.dtype))
+                return jnp.moveaxis(ecm, 0, ax)
+
+            return jax.tree_util.tree_map(put, self.batch_axes, cache, rows)
+
+        def _invalidate(cache, slot_ids):
+            def inv(path, ax, ec):
+                if ax == NO_AXIS or not _is_pos_ids(path):
+                    return ec
+                ecm = jnp.moveaxis(ec, ax, 0)
+                ecm = ecm.at[slot_ids].set(-1)
+                return jnp.moveaxis(ecm, 0, ax)
+
+            return jax.tree_util.tree_map_with_path(
+                inv, self.batch_axes, cache)
+
+        self._scatter = jax.jit(_scatter)
+        self._invalidate = jax.jit(_invalidate)
+
+    # -- slot lifecycle -------------------------------------------------------
+    @property
+    def free_slots(self) -> List[int]:
+        return list(self._free)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [s for s in range(self.slots) if s not in self._free]
+
+    def allocate(self, prompt_len: int) -> int:
+        """Claim a free slot for a request; returns the slot id."""
+        slot = self._free.pop(0)
+        self.pos[slot] = 0
+        self.lengths[slot] = prompt_len
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        return slot
+
+    def free(self, slot: int):
+        """Recycle a slot: pages return to the pool, row marked invalid."""
+        self.pos[slot] = 0
+        self.lengths[slot] = 0
+        self._free.append(slot)
+        self.cache = self._invalidate(self.cache, jnp.asarray([slot]))
+
+    # -- page accounting ------------------------------------------------------
+    @property
+    def total_pages(self) -> int:
+        return self.slots * self._pages_per_slot
+
+    @property
+    def pages_in_use(self) -> int:
+        used = 0
+        for s in range(self.slots):
+            if s in self._free:
+                continue
+            used += max(1, math.ceil(int(self.pos[s]) / self.page_size))
+        return used
+
+    # -- cache writes ---------------------------------------------------------
+    def write_rows(self, slot_ids, rows):
+        """Scatter prefilled cache rows (batch == len(slot_ids)) into slots."""
+        self.cache = self._scatter(self.cache, rows,
+                                   jnp.asarray(slot_ids, jnp.int32))
+
+    def advance(self, slot_ids, counts):
+        for s, n in zip(slot_ids, counts):
+            self.pos[s] += int(n)
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+
+
+class ExpandableKVCacheManager(KVCacheManager):
+    """Starts at ``initial_len`` sequence capacity, doubles up to ``max_len``.
+
+    Growth re-allocates only the leaves that actually carry a sequence axis
+    (probed structurally — SSM states and window-clamped ring buffers are
+    left alone), zero-padding K/V and padding ``pos_ids`` with -1.
+    """
+
+    def __init__(self, model, slots: int, max_len: int,
+                 initial_len: int = 64, page_size: int = 16):
+        initial_len = min(initial_len, max_len)
+        super().__init__(model, slots, max_len, page_size, alloc=False)
+        self.capacity = initial_len
+        self.cache = model.cache(slots, initial_len)
+        self.grows = 0
+
+    def _seq_axes(self, old_len: int, new_len: int):
+        return _probe_axes(
+            self.model,
+            lambda: self.model.cache(self.slots, old_len, abstract=True),
+            lambda: self.model.cache(self.slots, new_len, abstract=True))
+
+    def ensure(self, needed: int):
+        """Grow capacity (doubling) until >= needed tokens per slot."""
+        if needed <= self.capacity:
+            return
+        new_cap = self.capacity
+        while new_cap < needed:
+            new_cap = min(new_cap * 2, self.max_len)
+            if new_cap == self.capacity:
+                raise ValueError(
+                    f"request needs {needed} tokens; max_len={self.max_len}")
+        seq_axes = self._seq_axes(self.capacity, new_cap)
+
+        def grow(path, ax, leaf):
+            if ax == NO_AXIS:
+                return leaf
+            pad = new_cap - leaf.shape[ax]
+            widths = [(0, 0)] * leaf.ndim
+            widths[ax] = (0, pad)
+            fill = -1 if _is_pos_ids(path) else 0
+            return jnp.pad(leaf, widths, constant_values=fill)
+
+        self.cache = jax.tree_util.tree_map_with_path(
+            grow, seq_axes, self.cache)
+        self.capacity = new_cap
+        self.grows += 1

@@ -1,31 +1,48 @@
-"""Serving engine: continuous-batching scheduler over prefill/decode steps.
+"""Serving engine: continuous batching with per-slot positions.
 
-Requests enter a queue; the engine prefills new requests into free cache
-slots (one jit'd prefill per admission batch) and advances all active slots
-with a single fused decode step per tick. Slots free on EOS/max-tokens.
-This is the slot-based continuous batching of production LLM servers, sized
-down to run the reduced configs on CPU.
+Requests enter a queue; every ``step()`` the engine (1) admits queued
+requests into any free cache slot (honouring ``admit_cap`` — the actuation
+knob a ``Throttle`` action programs), and (2) advances ALL active slots with
+ONE fused jitted step: chunked-prefill extends for slots still consuming
+their prompt, single-token decode for slots mid-generation, sampling fused
+on-device (one host sync per tick).  There is no global decode position and
+no admission barrier — each slot runs at its own ``pos`` (the ragged
+``pos``/``n_valid`` contract of ``Model.decode``), so a request admitted
+while others are mid-decode produces outputs identical to running alone.
 
-Control-plane hooks (repro.control, DESIGN.md §3): every tick emits a
-``TickSample`` (queue depth, active slots, tokens, wall time) to the
-``on_tick`` subscribers, and admission honours ``admit_cap`` — the
-actuation knob a ``Throttle`` action programs when junction temperature
-crowds the limit. Both default to off; an unwired engine behaves exactly
-as before.
+Cache state lives in :class:`~repro.serve.cache.KVCacheManager`: per-slot
+positions, page accounting, slot recycling (freed rows are invalidated via
+``pos_ids = -1`` and reused without growing the arrays).
+
+Two scheduling paths, picked by model family:
+
+- **ragged** (attention-only stacks, no sliding window): prompts stream
+  through the fused step in ``prefill_chunk``-token extends — admission is
+  pure bookkeeping (no model call, no compile), and the fused step compiles
+  exactly twice (S in {1, chunk}).
+- **stateful** (SSM/hybrid and window-clamped ring caches): recurrent state
+  would be polluted by padded prompt tokens, so admission runs an
+  exact-length prefill per request and scatters the row; decode then joins
+  the same fused step.
+
+Control-plane hooks (repro.control, DESIGN.md §3): EVERY ``step()`` emits a
+``TickSample`` — including admit-only and fully-throttled iterations, so
+queue-depth bursts are visible exactly when ``Throttle`` decisions matter.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.control.telemetry import TickSample
 from repro.models.model import Model
+from repro.serve import scheduler as sched
+from repro.serve.cache import ExpandableKVCacheManager, KVCacheManager
 from repro.serve.step import sample
 
 
@@ -36,119 +53,195 @@ class Request:
     max_new: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None
+    fed: int = 0          # prompt tokens already written to the cache
+    submit_tick: int = 0  # engine tick at submission (queue-age / SLO)
+    finish_tick: int = 0
 
 
 class Engine:
     def __init__(self, model: Model, params, batch_slots: int = 4,
                  max_len: int = 256, eos_id: int = 1,
                  temperature: float = 0.0,
-                 admit_cap: Optional[int] = None):
+                 admit_cap: Optional[int] = None,
+                 top_k: int = 0, prefill_chunk: int = 16,
+                 page_size: int = 16, expandable: bool = False,
+                 seed: int = 0, warmup: bool = True):
         self.model = model
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
         self.eos = eos_id
         self.temperature = temperature
+        self.top_k = top_k
+        self.prefill_chunk = max(1, min(prefill_chunk, max_len))
         cfg = model.cfg
-        self.cache = model.cache(self.B, max_len)
+        # ragged chunked prefill needs position-table masking all the way
+        # down; recurrent state (ssm/hybrid) and ring buffers (sliding
+        # window) would absorb the padded chunk tails
+        self._ragged = (cfg.family in ("dense", "moe")
+                        and not cfg.sliding_window)
+        mgr_cls = ExpandableKVCacheManager if expandable else KVCacheManager
+        self.mgr = mgr_cls(model, batch_slots, max_len, page_size=page_size)
         self.slot_req: List[Optional[Request]] = [None] * self.B
-        self.pos = 0  # aligned decoding position (slot-synchronous design)
         self.queue: List[Request] = []
         self.finished: List[Request] = []
-        self.key = jax.random.PRNGKey(0)
+        self.key = jax.random.PRNGKey(seed)
         # control plane: admission throttle + tick telemetry subscribers
         self.admit_cap = admit_cap
         self.on_tick: List[Callable[[TickSample], None]] = []
         self.ticks = 0
 
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode(p, t, c, pos))
+        def fused(params, cache, tokens, pos, n_valid, key):
+            logits, cache = model.decode(params, tokens, cache, pos,
+                                         n_valid=n_valid)
+            idx = jnp.clip(n_valid - 1, 0, tokens.shape[1] - 1)
+            last = jnp.take_along_axis(
+                logits, idx[:, None, None], axis=1)[:, 0]  # (B,V)
+            return sample(last, key, self.temperature, self.top_k), cache
+
+        self._fused = jax.jit(fused)
+        if warmup:
+            self._warmup()
+
+    def _warmup(self):
+        """Pre-compile the fused step's two width buckets and the slot
+        invalidation so no compile lands mid-traffic (n_valid = 0 rows make
+        the warmup calls no-ops on cache contents)."""
+        widths = {1, self.prefill_chunk} if self._ragged else {1}
+        zero = jnp.zeros((self.B,), jnp.int32)
+        for S in sorted(widths):
+            self._fused(self.params, self.mgr.cache,
+                        jnp.zeros((self.B, S), jnp.int32), zero, zero,
+                        self.key)
+        self.mgr._invalidate(self.mgr.cache, jnp.asarray([0]))
+
+    # -- public API -----------------------------------------------------------
+    @property
+    def cache(self):
+        return self.mgr.cache
 
     def submit(self, req: Request):
+        req.submit_tick = self.ticks
         self.queue.append(req)
 
-    # -- admission: batch-prefill queued requests into free slots ------------
-    def _admit(self):
-        free = [i for i, r in enumerate(self.slot_req) if r is None]
-        if self.admit_cap is not None:  # throttled actuation
-            free = free[:max(self.admit_cap, 0)]
-        if not free or not self.queue:
-            return
-        batch = [self.queue.pop(0) for _ in free[: len(self.queue)]]
-        if not batch:
-            return
-        P = max(len(r.prompt) for r in batch)
-        toks = np.zeros((len(batch), P), np.int32)
-        for i, r in enumerate(batch):
-            toks[i, P - len(r.prompt):] = r.prompt  # left-pad
-        logits, cache = self.model.prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, max_len=self.max_len)
-        # scatter each prefilled row into its slot
-        for i, (slot, req) in enumerate(zip(free, batch)):
-            self.slot_req[slot] = req
-            # write row i of each cache leaf into slot of engine cache
-            def put(ec, pc):
-                # batch axis location differs per leaf rank; match by shape
-                for ax in range(ec.ndim):
-                    if ec.shape[ax] == self.B and pc.shape[ax] == len(batch):
-                        idx = [slice(None)] * ec.ndim
-                        idx[ax] = slot
-                        src = [slice(None)] * pc.ndim
-                        src[ax] = i
-                        return ec.at[tuple(idx)].set(pc[tuple(src)])
-                return ec  # leaf without batch axis (e.g. pos_ids)
-            self.cache = jax.tree_util.tree_map(put, self.cache, cache)
-            nxt = int(jnp.argmax(logits[i, -1]))
-            req.out.append(nxt)
-        self.pos = P
-
-    # -- one decode tick over all active slots --------------------------------
-    def _tick(self):
-        t0 = time.perf_counter()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return
-        toks = np.zeros((self.B, 1), np.int32)
-        for i in active:
-            toks[i, 0] = self.slot_req[i].out[-1]
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks), self.pos)
-        self.pos += 1
-        self.key, sk = jax.random.split(self.key)
-        nxt = np.asarray(sample(jnp.asarray(logits)[:, 0], sk,
-                                self.temperature))  # logits: (B,1,V)
-        for i in active:
-            req = self.slot_req[i]
-            tok = int(nxt[i])
-            req.out.append(tok)
-            if tok == self.eos or len(req.out) >= req.max_new \
-                    or self.pos >= self.max_len - 1:
+    # -- admission ------------------------------------------------------------
+    def _admit(self) -> int:
+        """Admit queued requests into free slots (<= admit_cap per step)."""
+        cap = self.B if self.admit_cap is None else max(self.admit_cap, 0)
+        admitted = 0
+        while self.queue and self.mgr.free_slots and admitted < cap:
+            req = self.queue.pop(0)
+            if len(req.prompt) >= self.max_len:
                 req.done = True
+                req.error = "prompt_too_long"
+                req.finish_tick = self.ticks
                 self.finished.append(req)
-                self.slot_req[i] = None
+                continue  # a reject is not an admission
+            slot = self.mgr.allocate(len(req.prompt))
+            self.slot_req[slot] = req
+            req.fed = 0
+            if not self._ragged:
+                self._prefill_into(slot, req)
+            admitted += 1
+        return admitted
+
+    def _prefill_into(self, slot: int, req: Request):
+        """Stateful-family path: exact-length prefill, scatter one row."""
+        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+        if isinstance(self.mgr, ExpandableKVCacheManager):
+            self.mgr.ensure(len(req.prompt) + 1)
+            cap = self.mgr.capacity
+        else:
+            cap = self.max_len
+        logits, rows = self.model.prefill(self.params, {"tokens": toks},
+                                          max_len=cap)
+        self.mgr.write_rows([slot], rows)
+        self.mgr.advance([slot], [len(req.prompt)])
+        req.fed = len(req.prompt)
+        self.key, sk = jax.random.split(self.key)
+        tok = int(sample(logits[:, -1], sk, self.temperature, self.top_k)[0])
+        self._append(req, slot, tok)
+
+    # -- the fused tick -------------------------------------------------------
+    def _compose(self) -> Optional[sched.TickPlan]:
+        work: List[sched.SlotWork] = []
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            P = len(req.prompt)
+            if req.fed < P:  # ragged path only: stream the prompt
+                k = min(self.prefill_chunk, P - req.fed)
+                work.append(sched.SlotWork(
+                    s, "prefill",
+                    np.asarray(req.prompt[req.fed:req.fed + k], np.int32),
+                    completes=(req.fed + k == P)))
+            else:
+                work.append(sched.SlotWork(
+                    s, "decode", np.asarray([req.out[-1]], np.int32)))
+        return sched.compose(work, self.mgr.pos, self.B, self.prefill_chunk)
+
+    def _tick(self) -> int:
+        plan = self._compose()
+        if plan is None:
+            return 0
+        if isinstance(self.mgr, ExpandableKVCacheManager):
+            self.mgr.ensure(int(plan.pos.max() + plan.width))
+        self.key, sk = jax.random.split(self.key)
+        nxt, self.mgr.cache = self._fused(
+            self.params, self.mgr.cache, jnp.asarray(plan.tokens),
+            jnp.asarray(plan.pos), jnp.asarray(plan.n_valid), sk)
+        nxt = np.asarray(nxt)  # the tick's single host sync
+        gen = 0
+        self.mgr.advance([w.slot for w in plan.work],
+                         [len(w.tokens) for w in plan.work])
+        for w in plan.work:
+            req = self.slot_req[w.slot]
+            if w.kind == "prefill":
+                req.fed += len(w.tokens)
+                if w.completes:  # logit after the last prompt token
+                    self._append(req, w.slot, int(nxt[w.slot]))
+                    gen += 1
+            else:
+                self._append(req, w.slot, int(nxt[w.slot]))
+                gen += 1
+        return gen
+
+    def _append(self, req: Request, slot: int, tok: int):
+        req.out.append(tok)
+        if (tok == self.eos or len(req.out) >= req.max_new
+                or self.mgr.pos[slot] >= self.max_len - 1):
+            req.done = True
+            req.finish_tick = self.ticks
+            self.finished.append(req)
+            self.slot_req[slot] = None
+            self.mgr.free(slot)
+
+    # -- scheduler loop -------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler iteration (admit, then one fused tick); True while
+        there is still work.  ``run`` loops this; control-plane drivers
+        interleave it with ``ControlLoop.step`` ticks."""
+        if not (self.queue or any(r is not None for r in self.slot_req)):
+            return False
+        t0 = time.perf_counter()
+        admitted = self._admit()
+        gen = self._tick()
+        oldest = (float(self.ticks - min(r.submit_tick for r in self.queue))
+                  if self.queue else 0.0)
         if self.on_tick:
             # slots rides along so the control plane can fold active/slots
             # into the load fraction feeding the RailField utilization axis
             smp = TickSample(
                 tick=self.ticks, queued=len(self.queue),
                 active=sum(r is not None for r in self.slot_req),
-                finished=len(self.finished), tokens=len(active),
-                tick_s=time.perf_counter() - t0, slots=self.B)
+                finished=len(self.finished), tokens=gen,
+                tick_s=time.perf_counter() - t0, slots=self.B,
+                admitted=admitted, oldest_wait=oldest)
             for cb in self.on_tick:
                 cb(smp)
-
-    def step(self) -> bool:
-        """One scheduler iteration (admit when idle, then decode); True
-        while there is still work.  ``run`` loops this; control-plane
-        drivers (examples/closed_loop_serving.py) interleave it with
-        ``ControlLoop.step`` ticks."""
-        if not (self.queue or any(self.slot_req)):
-            return False
-        if not any(self.slot_req):
-            self._admit()
-        self._tick()
         self.ticks += 1
-        return bool(self.queue or any(self.slot_req))
+        return bool(self.queue or any(r is not None for r in self.slot_req))
 
     def run(self, max_ticks: int = 512) -> List[Request]:
         ticks = 0

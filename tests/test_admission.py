@@ -1,0 +1,167 @@
+"""Thermal-aware admission co-scheduling (repro.control.admission) +
+the §8 serving acceptance day (scenarios.serve_replay)."""
+import jax
+import numpy as np
+import pytest
+
+from repro import scenarios as sc
+from repro.configs import registry
+from repro.control import (AdmissionController, LutController, SetRails,
+                           Snapshot, Throttle)
+from repro.core import runtime as RT
+from repro.core import tpu_fleet as TF
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="module")
+def rt():
+    return RT.EnergyAwareRuntime(
+        TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                     collective_s=0.2),
+        policy="power_save")
+
+
+@pytest.fixture(scope="module")
+def field(rt):
+    from repro.control.lut import sweep_points
+    return rt.build_field(sweep_points(10.0, 45.0, 4),
+                          sweep_points(0.25, 1.0, 4))
+
+
+def _adm(rt, field, **kw):
+    kw.setdefault("defer_premium", 1.05)
+    kw.setdefault("max_wait", 64.0)
+    return AdmissionController(
+        LutController(rt.planner, field=field, guard_band_c=3.0), **kw)
+
+
+def _snap(t_amb, queued=3, active=0, slots=4, wait=0.0, t_chip=None):
+    return Snapshot(t_amb=t_amb, queued=queued, active=active, slots=slots,
+                    oldest_wait=wait, t_chip=t_chip)
+
+
+def _cap(actions):
+    thr = [a for a in actions if isinstance(a, Throttle)]
+    assert len(thr) == 1  # exactly one joint Throttle per decision
+    return thr[0].admit_cap
+
+
+class TestAdmissionPricing:
+    def test_cold_admits_hot_defers(self, rt, field):
+        adm = _adm(rt, field)
+        assert _cap(adm.decide(_snap(10.0))) == 3  # day's best price
+        assert _cap(adm.decide(_snap(44.0))) == 0  # hot: defer everything
+        assert adm.stats.deferred >= 3
+
+    def test_rails_ride_with_the_throttle(self, rt, field):
+        """SetRails and Throttle land as ONE decision, and the rails are
+        computed at the planned (post-admission) utilization: admitting 3
+        of 4 slots at a cold tick must program higher rails than the
+        deferred (still ~idle) hot pod's sensed load would."""
+        adm = _adm(rt, field)
+        acts = adm.decide(_snap(10.0))
+        rails = [a for a in acts if isinstance(a, SetRails)]
+        assert len(rails) == 1 and _cap(acts) == 3
+        vc_planned = float(np.median(np.asarray(rails[0].v_core)))
+        vc_idle, _ = field.lookup(10.0, 0.25)
+        assert vc_planned > float(np.median(vc_idle))  # rails for u=0.75
+
+    def test_slo_forcing_admits_backlog(self, rt, field):
+        adm = _adm(rt, field, max_wait=8.0)
+        assert _cap(adm.decide(_snap(44.0, wait=7.9))) == 0
+        assert _cap(adm.decide(_snap(44.0, wait=8.0))) == 3
+        assert adm.stats.forced == 1
+
+    def test_min_active_floor(self, rt, field):
+        adm = _adm(rt, field, min_active=1)
+        assert _cap(adm.decide(_snap(44.0, active=0))) == 1
+        assert _cap(adm.decide(_snap(44.0, active=1))) == 0
+
+    def test_free_slots_bound_the_budget(self, rt, field):
+        adm = _adm(rt, field)
+        assert _cap(adm.decide(_snap(10.0, queued=9, active=3))) == 1
+        assert _cap(adm.decide(_snap(10.0, queued=9, active=4))) == 0
+
+    def test_thermal_emergency_floors_the_budget(self, rt, field):
+        """The inner controller's emergency throttle (junction temperature
+        crowding the limit) caps admission even at the day's best price."""
+        adm = _adm(rt, field)
+        hot_chips = np.full(field.chips, TF.T_MAX_CHIP - 1.0)
+        assert _cap(adm.decide(_snap(10.0, t_chip=hot_chips))) <= 1
+        # the emergency cap stays armed across ticks (hysteresis) even
+        # though the inner controller only emits Throttle on transitions
+        assert _cap(adm.decide(_snap(10.0, t_chip=hot_chips))) <= 1
+        cool_chips = np.full(field.chips, 60.0)
+        assert _cap(adm.decide(_snap(10.0, t_chip=cool_chips))) == 3
+
+    def test_passthrough_without_pricing_signal(self, rt, field):
+        adm = _adm(rt, field)
+        acts = adm.decide(_snap(25.0, slots=0))  # legacy ambient-only tick
+        assert not any(isinstance(a, Throttle) for a in acts)
+        assert adm.stats.passthrough == 1
+
+
+class TestWorkloads:
+    def test_poisson_fingerprint_pins_the_seed(self):
+        a = sc.poisson_requests(ticks=8, rate=1.5, seed=0)
+        b = sc.poisson_requests(ticks=8, rate=1.5, seed=0)
+        c = sc.poisson_requests(ticks=8, rate=1.5, seed=1)
+        assert a.fingerprint == b.fingerprint
+        assert a.fingerprint != c.fingerprint
+
+    def test_trace_requests_round_trip(self):
+        wl = sc.trace_requests([(0, 4, 2), (3, 8, 5)])
+        assert [a.tick for a in wl.arrivals] == [0, 3]
+        assert wl.arrivals[1].prompt_len == 8
+        assert wl.by_tick()[3][0].rid == 1
+
+    def test_burst_rides_hot_window(self):
+        wl = sc.poisson_burst(burst_at=2, burst_n=5, tail_ticks=3, seed=7)
+        assert sum(a.tick == 2 for a in wl.arrivals) == 5
+        assert all(a.tick > 2 for a in wl.arrivals[5:])
+
+
+class TestServeReplayAcceptance:
+    SLO = 60.0  # engine ticks, submit -> finish
+
+    @pytest.fixture(scope="class")
+    def dense(self):
+        cfg = registry.get("llama3.2-1b").reduced()
+        model = Model(cfg)
+        return model, model.init(jax.random.PRNGKey(0))
+
+    @pytest.fixture(scope="class")
+    def runs(self, rt, field, dense):
+        model, params = dense
+        day = sc.serve_day(ticks=10, hot=42.0, cool=12.0, cool_at=5)
+        wl = sc.poisson_burst(burst_at=1, burst_n=6, tail_ticks=2, seed=0)
+        mk = lambda: LutController(rt.planner, field=field, guard_band_c=3.0)
+        thru = sc.serve_replay(day, wl, model, params, controller=mk(),
+                               runtime=rt)
+        therm = sc.serve_replay(
+            day, wl, model, params, runtime=rt,
+            controller=AdmissionController(mk(), defer_premium=1.05,
+                                           max_wait=240.0))
+        return wl, thru, therm
+
+    def test_thermal_beats_throughput_at_equal_slo(self, runs):
+        wl, thru, therm = runs
+        # same requests, same greedy tokens — the energy is the difference
+        assert thru.outputs == therm.outputs
+        assert thru.finished == therm.finished == len(wl.arrivals)
+        assert thru.rejected == therm.rejected == 0
+        assert thru.max_wait <= self.SLO and therm.max_wait <= self.SLO
+        assert therm.deferred > 0  # the hot window was actually deferred
+        assert therm.tokens_per_joule > thru.tokens_per_joule
+
+    def test_replay_is_fingerprint_pinned(self, rt, field, dense, runs):
+        wl, _, therm = runs
+        model, params = dense
+        day = sc.serve_day(ticks=10, hot=42.0, cool=12.0, cool_at=5)
+        again = sc.serve_replay(
+            day, wl, model, params, runtime=rt,
+            controller=AdmissionController(
+                LutController(rt.planner, field=field, guard_band_c=3.0),
+                defer_premium=1.05, max_wait=240.0))
+        assert again.fingerprint == therm.fingerprint
+        assert again.caps.tolist() == therm.caps.tolist()

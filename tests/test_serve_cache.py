@@ -1,0 +1,121 @@
+"""KVCacheManager / ExpandableKVCacheManager (repro.serve.cache)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models.model import Model
+from repro.serve.cache import (NO_AXIS, ExpandableKVCacheManager,
+                               KVCacheManager)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = registry.get("llama3.2-1b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _leaf_shapes(cache):
+    return [x.shape for x in jax.tree_util.tree_leaves(cache)]
+
+
+class TestKVCacheManager:
+    def test_probes_batch_axis_on_every_leaf(self, dense):
+        _, model, _ = dense
+        mgr = KVCacheManager(model, slots=3, max_len=32)
+        axes = jax.tree_util.tree_leaves(mgr.batch_axes)
+        assert axes and all(a != NO_AXIS for a in axes)
+        # probing is structural: the axis must actually carry slot count
+        for ax, leaf in zip(axes, jax.tree_util.tree_leaves(mgr.cache)):
+            assert leaf.shape[ax] == 3
+
+    def test_slot_lifecycle_and_recycling(self, dense):
+        _, model, _ = dense
+        mgr = KVCacheManager(model, slots=2, max_len=32)
+        a = mgr.allocate(5)
+        b = mgr.allocate(7)
+        assert sorted([a, b]) == [0, 1] and mgr.free_slots == []
+        mgr.advance([a], [5])
+        assert mgr.pos[a] == 5
+        mgr.free(a)
+        assert a in mgr.free_slots and mgr.pos[a] == 0
+        c = mgr.allocate(3)  # recycled, no new arrays
+        assert c == a
+
+    def test_free_invalidates_pos_ids_row(self, dense):
+        _, model, _ = dense
+        mgr = KVCacheManager(model, slots=2, max_len=16)
+        s = mgr.allocate(4)
+        # mark some positions valid, then free: the row must go to -1
+        mgr.cache["stack"]["pos_ids"] = (
+            mgr.cache["stack"]["pos_ids"].at[:, s, :4].set(
+                jnp.arange(4, dtype=jnp.int32)))
+        mgr.free(s)
+        assert (np.asarray(mgr.cache["stack"]["pos_ids"][:, s]) == -1).all()
+
+    def test_page_accounting(self, dense):
+        _, model, _ = dense
+        mgr = KVCacheManager(model, slots=2, max_len=32, page_size=8)
+        assert mgr.total_pages == 8 and mgr.pages_in_use == 0
+        s = mgr.allocate(1)
+        mgr.advance([s], [9])  # 9 tokens -> 2 pages
+        assert mgr.pages_in_use == 2
+        assert mgr.peak_pages == 2
+        mgr.free(s)
+        assert mgr.pages_in_use == 0 and mgr.peak_pages == 2
+
+    def test_write_rows_scatters_one_request(self, dense):
+        _, model, params = dense
+        mgr = KVCacheManager(model, slots=3, max_len=16)
+        toks = jnp.arange(4, dtype=jnp.int32)[None]
+        _, rows = model.prefill(params, {"tokens": toks}, max_len=16)
+        mgr.write_rows([2], rows)
+        got = np.asarray(mgr.cache["stack"]["k"], np.float32)
+        ref = np.asarray(rows["stack"]["k"], np.float32)[:, 0]
+        np.testing.assert_allclose(got[:, 2], ref, rtol=1e-6)
+        assert (got[:, 0] == 0).all()  # other slots untouched
+
+
+class TestExpandableKVCacheManager:
+    def test_grows_by_doubling_to_max_len(self, dense):
+        _, model, _ = dense
+        mgr = ExpandableKVCacheManager(model, slots=2, max_len=64,
+                                       initial_len=8)
+        assert mgr.capacity == 8
+        shapes0 = _leaf_shapes(mgr.cache)
+        mgr.ensure(8)
+        assert mgr.capacity == 8 and _leaf_shapes(mgr.cache) == shapes0
+        mgr.ensure(9)
+        assert mgr.capacity == 16 and mgr.grows == 1
+        mgr.ensure(50)  # doubles twice in one call
+        assert mgr.capacity == 64 and mgr.grows == 2
+        with pytest.raises(ValueError):
+            mgr.ensure(65)
+
+    def test_growth_pads_pos_ids_invalid(self, dense):
+        _, model, _ = dense
+        mgr = ExpandableKVCacheManager(model, slots=2, max_len=32,
+                                       initial_len=8)
+        mgr.cache["stack"]["pos_ids"] = (
+            mgr.cache["stack"]["pos_ids"].at[..., :2].set(0))
+        mgr.ensure(16)
+        ids = np.asarray(mgr.cache["stack"]["pos_ids"])
+        assert ids.shape[-1] == 16
+        assert (ids[..., :2] == 0).all()   # old contents preserved
+        assert (ids[..., 8:] == -1).all()  # new space invalid, not pos 0
+
+    def test_engine_results_match_fixed_cache(self, dense):
+        from repro.serve.engine import Engine, Request
+        cfg, model, params = dense
+        prompt = np.arange(5) % cfg.vocab_size
+
+        def gen(expandable):
+            eng = Engine(model, params, batch_slots=2, max_len=64,
+                         eos_id=-1, expandable=expandable, warmup=False)
+            eng.submit(Request(0, prompt, max_new=6))
+            return eng.run()[0].out
+
+        assert gen(False) == gen(True)
