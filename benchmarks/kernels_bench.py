@@ -263,6 +263,33 @@ def closed_loop(quick: bool = True) -> Dict:
                           runtime=rt, engine_steps=6, batch_slots=4,
                           max_len=64)
     out["serve_tokens_per_joule"] = rep.tokens_per_joule
+
+    # -- fault containment (DESIGN.md §9) ------------------------------------
+    # thermal-emergency preemption latency: one Preempt actuation = gather
+    # the victims' KV rows, device->host into the page pool, free the
+    # slots, requeue (the resume tick afterwards is untimed)
+    eng2 = Engine(model, params, batch_slots=4, max_len=64)
+    for rid in range(10):
+        eng2.submit(Request(rid, np.arange(6) % cfg.vocab_size, max_new=48))
+    eng2.step()  # fill slots, pay prefill/decode + gather compiles
+    eng2.preempt_to(eng2.B - 1)  # compile the row gather outside the timing
+    lat = []
+    for _ in range(3 if quick else 8):
+        while sum(r is not None for r in eng2.slot_req) < 2 and eng2.step():
+            pass
+        t0 = time.perf_counter()
+        eng2.preempt_to(1)
+        lat.append(time.perf_counter() - t0)
+        eng2.step()  # untimed: re-admit (bitwise resume) for the next round
+    out["preempt_latency_us"] = float(np.mean(lat)) * 1e6
+
+    # watchdog recovery on the §9 chaos day: ticks from a trip (missed
+    # deadline / diverged solver) back to the normal solver-eligible path.
+    # Deterministic (seeded fault streams), so the --check gate pins it.
+    crep = sc.replay(sc.chaos_day(ticks=20), runtime=rt,
+                     controller=controller)
+    assert crep.recover_ticks, "chaos day completed no watchdog episode"
+    out["mean_ticks_to_recover"] = crep.mean_ticks_to_recover
     return out
 
 
@@ -274,6 +301,8 @@ def _gated(k: str) -> bool:
     interpret-mode and load-dependent latency entries are not."""
     if k == "railfield_build_ms":  # warm device-call-bound: stable
         return True
+    if k == "mean_ticks_to_recover":  # deterministic chaos-day replay:
+        return True                   # a drift here is a logic change
     return k.endswith("_us") and "interpret" not in k
 
 

@@ -28,8 +28,9 @@ from repro.control.actuator import (Actuator, EngineActuator, FleetActuator,
 from repro.control.admission import AdmissionController, AdmissionStats
 from repro.control.controller import (Action, BoostRail, Controller,
                                       ControllerStats, LutController,
-                                      RailBackoff, Rebalance, Restore,
-                                      SetRails, Throttle)
+                                      Preempt, RailBackoff, Rebalance,
+                                      Restore, SafeState, SetRails, Throttle)
+from repro.control.faults import ChaosTelemetry, ControlFaultModel
 from repro.control.loop import ControlLoop, LoopReport
 from repro.control.lut import (DEFAULT_UTIL_KNOTS, DynamicLut, RailField,
                                sweep_points)
@@ -37,9 +38,10 @@ from repro.control.planner import FleetPlanner, PlanOut
 from repro.control.telemetry import (AmbientSample, AmbientSensor,
                                      ChipTempSample, EngineTelemetry,
                                      HeartbeatSample, MonitorTelemetry,
-                                     SdcSample, Snapshot, StepSample,
-                                     StragglerSample, TelemetryBus,
-                                     TelemetrySource, TickSample, UtilSample)
+                                     SafeStateSample, SdcSample, Snapshot,
+                                     StepSample, StragglerSample,
+                                     TelemetryBus, TelemetrySource,
+                                     TickSample, UtilSample)
 
 __all__ = [
     # telemetry
@@ -47,11 +49,14 @@ __all__ = [
     "AmbientSensor", "EngineTelemetry", "MonitorTelemetry",
     "AmbientSample", "ChipTempSample", "StepSample", "TickSample",
     "UtilSample", "StragglerSample", "HeartbeatSample", "SdcSample",
+    "SafeStateSample",
+    # fault containment (§9)
+    "ControlFaultModel", "ChaosTelemetry",
     # decisions
     "Controller", "LutController", "ControllerStats",
     "AdmissionController", "AdmissionStats",
     "Action", "SetRails", "BoostRail", "Rebalance", "Throttle",
-    "RailBackoff", "Restore",
+    "RailBackoff", "Restore", "SafeState", "Preempt",
     # actuation
     "Actuator", "FleetActuator", "EngineActuator", "FleetReadout",
     # planning + loop

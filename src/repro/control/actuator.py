@@ -25,9 +25,11 @@ import numpy as np
 
 from repro.core import thermal
 from repro.core import tpu_fleet as TF
-from repro.control.controller import (Action, BoostRail, RailBackoff,
-                                      Rebalance, SetRails, Throttle)
-from repro.control.telemetry import ChipTempSample, Sample, Snapshot
+from repro.control.controller import (Action, BoostRail, Preempt,
+                                      RailBackoff, Rebalance, SafeState,
+                                      SetRails, Throttle)
+from repro.control.telemetry import (ChipTempSample, SafeStateSample,
+                                     Sample, Snapshot)
 
 
 @runtime_checkable
@@ -55,7 +57,9 @@ class FleetActuator:
     """
 
     def __init__(self, substrate, prof: TF.StepProfile, lib: TF.TpuLibrary,
-                 t_amb: float = 25.0, planner=None, field=None):
+                 t_amb: float = 25.0, planner=None, field=None,
+                 write_faults=None, max_retries: int = 3,
+                 backoff_us: float = 50.0):
         self.substrate = substrate
         self.prof = prof
         self.lib = lib
@@ -73,6 +77,18 @@ class FleetActuator:
         self.T = np.asarray(substrate.T0({"t_amb": t_amb}))
         self.readout: Optional[FleetReadout] = None
         self._nominal_cache = {}
+        # §9 verify-after-write rail channel: a ControlFaultModel NACKs
+        # individual chip writes; bounded exponential-backoff retry, then
+        # the chip pins to nominal safe-state rails until cleared
+        self.write_faults = write_faults
+        self.max_retries = max(int(max_retries), 0)
+        self.backoff_us = float(backoff_us)
+        self.safe_state: set = set()  # chips pinned at nominal rails
+        self.safe_log: List[SafeState] = []
+        self.write_retries = 0     # chip-writes retried after a NACK
+        self.write_nacks = 0       # NACKed chip-write attempts (cumulative)
+        self.backoff_wait_us = 0.0  # total modeled backoff wait
+        self._now = 0.0            # control-tick clock for the fault model
 
     @classmethod
     def from_runtime(cls, rt, t_amb: Optional[float] = None, field=None):
@@ -86,17 +102,19 @@ class FleetActuator:
         if isinstance(action, SetRails):
             # scalar (legacy pod-uniform LUT) or per-chip (RailField /
             # solver plan) rail vectors land the same way
-            self.v_core = np.broadcast_to(
-                np.asarray(action.v_core, np.float32),
-                self.v_core.shape).copy()
-            self.v_sram = np.broadcast_to(
-                np.asarray(action.v_sram, np.float32),
-                self.v_sram.shape).copy()
+            vc = np.broadcast_to(np.asarray(action.v_core, np.float32),
+                                 self.v_core.shape).copy()
+            vs = np.broadcast_to(np.asarray(action.v_sram, np.float32),
+                                 self.v_sram.shape).copy()
             for c in self.boosted:  # boosts survive field/plan rewrites
                 bc, bs = self._boost_rails.get(c,
                                                (TF.V_CORE_NOM, TF.V_SRAM_NOM))
-                self.v_core[c] = bc  # each chip keeps ITS boost rails, not
-                self.v_sram[c] = bs  # a pod-wide nominal pin
+                vc[c] = bc  # each chip keeps ITS boost rails, not
+                vs[c] = bs  # a pod-wide nominal pin
+            self._program(vc, vs)
+            return True
+        if isinstance(action, SafeState):
+            self._pin_safe(action.chip)
             return True
         if isinstance(action, BoostRail):
             self.boosted.add(action.chip)
@@ -119,6 +137,61 @@ class FleetActuator:
     def release_boost(self, chip: int) -> None:
         self.boosted.discard(chip)
         self._boost_rails.pop(chip, None)
+
+    # -- §9 verify-after-write rail channel -----------------------------
+    def begin_tick(self, now: float) -> None:
+        """Clock the write channel (the fault model windows are in ticks);
+        called by the loop before actions land."""
+        self._now = float(now)
+
+    def _program(self, vc: np.ndarray, vs: np.ndarray) -> None:
+        """Land the target rails chip by chip.  Without a fault model this
+        is one atomic write (the legacy path, bitwise identical).  With
+        one, each chip write is verify-after-write: a NACKed chip retries
+        with exponential backoff up to ``max_retries``, then pins to
+        nominal safe-state rails until :meth:`clear_safe_state`."""
+        n = vc.shape[0]
+        for c in self.safe_state:  # pinned chips ignore new targets
+            vc[c] = TF.V_CORE_NOM
+            vs[c] = TF.V_SRAM_NOM
+        if self.write_faults is None:
+            self.v_core, self.v_sram = vc, vs
+            return
+        pending = np.array([c for c in range(n) if c not in self.safe_state],
+                           np.int64)
+        for c in self.safe_state:
+            self.v_core[c] = TF.V_CORE_NOM
+            self.v_sram[c] = TF.V_SRAM_NOM
+        delay = self.backoff_us
+        for attempt in range(self.max_retries + 1):
+            nack = np.asarray(self.write_faults.nack(
+                int(pending.size), self._now, attempt), bool)
+            acked = pending[~nack]
+            self.v_core[acked] = vc[acked]
+            self.v_sram[acked] = vs[acked]
+            pending = pending[nack]
+            if pending.size == 0:
+                return
+            self.write_nacks += int(pending.size)
+            if attempt < self.max_retries:
+                self.write_retries += int(pending.size)
+                self.backoff_wait_us += delay
+                delay *= 2.0
+        for c in pending:  # retries exhausted: nominal is the safe state
+            self._pin_safe(int(c))
+
+    def _pin_safe(self, chip: int) -> None:
+        self.v_core[chip] = TF.V_CORE_NOM
+        self.v_sram[chip] = TF.V_SRAM_NOM
+        if chip not in self.safe_state:
+            self.safe_state.add(chip)
+            self.safe_log.append(SafeState(chip=chip, v_core=TF.V_CORE_NOM,
+                                           v_sram=TF.V_SRAM_NOM))
+
+    def clear_safe_state(self, chip: int) -> None:
+        """Operator/repair path: the chip accepts writes again from the
+        next SetRails on."""
+        self.safe_state.discard(chip)
 
     # ------------------------------------------------------------------
     def settle(self, snap: Snapshot,
@@ -192,19 +265,28 @@ class FleetActuator:
 
     # -- TelemetrySource -------------------------------------------------
     def poll(self, now: float) -> List[Sample]:
-        return [ChipTempSample(self.T)]
+        out: List[Sample] = [ChipTempSample(self.T)]
+        if self.safe_state:  # planner sees safe-state chips via telemetry
+            out.append(SafeStateSample(frozenset(self.safe_state)))
+        return out
 
 
 class EngineActuator:
-    """Admission control on a ``serve.Engine`` (Throttle -> admit_cap)."""
+    """Admission control on a ``serve.Engine`` (Throttle -> admit_cap,
+    Preempt -> evict active low-priority slots to the host page pool)."""
 
     def __init__(self, engine):
         self.engine = engine
         self.log: List[Throttle] = []
+        self.preempt_log: List[Preempt] = []
 
     def apply(self, action: Action) -> bool:
         if isinstance(action, Throttle):
             self.engine.admit_cap = action.admit_cap
             self.log.append(action)
+            return True
+        if isinstance(action, Preempt):
+            self.engine.preempt_to(action.keep_active)
+            self.preempt_log.append(action)
             return True
         return False

@@ -53,7 +53,8 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.control.controller import Action, LutController, Throttle
+from repro.control.controller import (Action, LutController, Preempt,
+                                      Throttle)
 from repro.control.telemetry import Snapshot
 
 _EPS = 1e-9
@@ -66,6 +67,7 @@ class AdmissionStats:
     deferred: int = 0      # admissions priced out to a cooler tick
     forced: int = 0        # SLO-forced full-backlog admissions
     passthrough: int = 0   # ticks with no pricing signal (no field/p_nom)
+    preempts: int = 0      # thermal-emergency Preempt actions emitted
 
 
 class AdmissionController:
@@ -91,11 +93,17 @@ class AdmissionController:
     """
 
     def __init__(self, inner: LutController, defer_premium: float = 1.15,
-                 max_wait: float = 64.0, min_active: int = 0):
+                 max_wait: float = 64.0, min_active: int = 0,
+                 preempt: bool = False):
         self.inner = inner
         self.defer_premium = float(defer_premium)
         self.max_wait = float(max_wait)
         self.min_active = int(min_active)
+        # opt-in §9 escalation: while the inner thermal-emergency throttle
+        # is armed AND more slots are active than it allows, emit a Preempt
+        # evicting the excess low-priority work (admission caps only stop
+        # NEW work; a runaway needs active load shed too)
+        self.preempt = bool(preempt)
         self.stats = AdmissionStats()
         self._thermal_cap: Optional[int] = None  # inner emergency throttle
 
@@ -181,4 +189,8 @@ class AdmissionController:
                 kept.append(a)
         cap = k if self._thermal_cap is None else min(k, self._thermal_cap)
         kept.append(Throttle(cap))
+        if (self.preempt and self._thermal_cap is not None
+                and snap.active > self._thermal_cap):
+            self.stats.preempts += 1
+            kept.append(Preempt(keep_active=self._thermal_cap))
         return kept

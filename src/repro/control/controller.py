@@ -103,8 +103,30 @@ class Restore:
     chip: int
 
 
+@dataclass(frozen=True)
+class SafeState:
+    """Pin one chip to nominal safe-state rails.  Originates in the
+    :class:`~repro.control.actuator.FleetActuator` write channel when a
+    rail write exhausts its retries (observable in ``safe_log``, like
+    ``RailBackoff``); applying it by hand force-pins a chip."""
+    chip: int
+    v_core: float
+    v_sram: float
+    reason: str = "write_nack"
+
+
+@dataclass(frozen=True)
+class Preempt:
+    """Thermal emergency outranks running work: evict active low-priority
+    requests until at most ``keep_active`` slots stay busy.  The engine
+    moves their KV pages to the host page pool and re-queues them for
+    bitwise-identical resumption once the emergency clears."""
+    keep_active: int
+    reason: str = "thermal_emergency"
+
+
 Action = Union[SetRails, BoostRail, Rebalance, Throttle, RailBackoff,
-               Restore]
+               Restore, SafeState, Preempt]
 
 
 @runtime_checkable
@@ -128,6 +150,15 @@ class ControllerStats:
     backoffs: int = 0  # SDC-budget rail retreats (error-tolerant tier)
     restores: int = 0  # cooled condemned chips re-admitted
     replan_reasons: List[str] = field(default_factory=list)
+    # §9 fault containment
+    quarantined: int = 0       # bus-rejected samples seen (cumulative)
+    stale_fallbacks: int = 0   # ticks answered at last-good + guard band
+    degraded_ticks: int = 0    # ticks run at watchdog level >= 1
+    frozen_ticks: int = 0      # ticks run at watchdog level 2 (frozen)
+    safe_states: int = 0       # chips seen entering rail safe state
+    below_axis_clamps: int = 0  # fast-path lookups clamped below u_min
+    watchdog_events: List[str] = field(default_factory=list)
+    recover_ticks: List[float] = field(default_factory=list)  # per episode
 
 
 class LutController:
@@ -156,7 +187,10 @@ class LutController:
                  sdc_hysteresis: int = 3,
                  backoff_step_v: float = 0.010,
                  restore_after: Optional[int] = None,
-                 restore_below_c: float = 70.0):
+                 restore_below_c: float = 70.0,
+                 faults=None,
+                 stale_after: Optional[float] = 2.0,
+                 watchdog_hysteresis: int = 3):
         self.planner = planner
         if field is None and lut is None:
             lo, hi, n = sweep if sweep is not None else self.DEFAULT_SWEEP
@@ -181,6 +215,12 @@ class LutController:
         # hysteresis-based restore of cooled condemned chips; None disables
         self.restore_after = restore_after
         self.restore_below_c = restore_below_c
+        # §9 fault containment: chaos scripting (scripted deadline-miss /
+        # solver-fault ticks), stale-sensor fallback bound, and the
+        # watchdog's clean-tick de-escalation window
+        self.faults = faults
+        self.stale_after = stale_after
+        self.watchdog_hysteresis = max(int(watchdog_hysteresis), 1)
         self.stats = ControllerStats()
         self.plan: Optional[PlanOut] = None  # last full-solver plan
         self._t_prev: Optional[float] = None
@@ -190,6 +230,13 @@ class LutController:
         self._backoff = 0          # cumulative SDC rail-retreat steps
         self._sdc_clean = 0        # consecutive within-budget ticks
         self._cool: Dict[int, int] = {}  # condemned chip -> cool ticks
+        # watchdog ladder: 0 = normal, 1 = fast path only, 2 = frozen
+        self._degrade = 0
+        self._clean = 0            # consecutive event-free ticks
+        self._degrade_since: Optional[float] = None
+        self._last_rails = None    # (vc, vs) as last programmed
+        self._pending_trips: List[str] = []  # loop-reported deadline misses
+        self._safe_seen: set = set()  # safe-state chips already rebalanced
 
     # ------------------------------------------------------------------
     def reset(self) -> None:
@@ -206,6 +253,14 @@ class LutController:
         self._backoff = 0
         self._sdc_clean = 0
         self._cool = {}
+        self._degrade = 0
+        self._clean = 0
+        self._degrade_since = None
+        self._last_rails = None
+        self._pending_trips = []
+        self._safe_seen = set()
+        if self.faults is not None:
+            self.faults.reset()
         self.planner.T_last = None  # first replan restarts deterministic
 
     # ------------------------------------------------------------------
@@ -236,6 +291,43 @@ class LutController:
             return f"thermal_emergency({snap.t_max:.1f}C)"
         return None
 
+    # -- §9 watchdog ----------------------------------------------------
+    def note_deadline_miss(self) -> None:
+        """Report a missed tick deadline (called by the loop, between
+        ticks): the next decision degrades one watchdog level."""
+        self._pending_trips.append("deadline_miss")
+
+    def _trip(self, event: str, now: float) -> None:
+        if self._degrade == 0:
+            self._degrade_since = now
+        self._degrade = min(self._degrade + 1, 2)
+        self._clean = 0
+        self.stats.watchdog_events.append(f"{event}@{now:g}")
+
+    def _fast_rails(self, t_amb: float, util):
+        """The interpolated fast path, with the below-axis clamp counted
+        (a silent clamp hid sub-``u_min`` load excursions — ROADMAP 3)."""
+        if self.field is not None:
+            if (util is not None and np.size(util)
+                    and float(np.min(np.asarray(util)))
+                    < self.field.u_min - 1e-9):
+                self.stats.below_axis_clamps += 1
+            return self.field.lookup(t_amb, util)
+        return self.lut.lookup(t_amb)
+
+    def _plan_ok(self, plan: PlanOut) -> bool:
+        """Reject a diverged solver fallback: non-finite or out-of-band
+        rails / junction temperature (bounds loose enough that every
+        healthy fixed point passes untouched)."""
+        vc = np.asarray(plan.v_core, np.float64)
+        vs = np.asarray(plan.v_sram, np.float64)
+        return bool(np.all(np.isfinite(vc)) and np.all(np.isfinite(vs))
+                    and np.all(vc > 0.2) and np.all(vs > 0.2)
+                    and np.all(vc <= TF.V_CORE_NOM + 0.1)
+                    and np.all(vs <= TF.V_SRAM_NOM + 0.1)
+                    and np.isfinite(plan.t_max)
+                    and plan.t_max <= TF.T_MAX_CHIP + 40.0)
+
     def decide(self, snap: Snapshot,
                util: Optional[np.ndarray] = None) -> List[Action]:
         if snap.t_amb is None:
@@ -245,6 +337,16 @@ class LutController:
             # carries them (None otherwise: the legacy ambient-only tick)
             util = snap.util(self.planner.substrate.n_domains)
         actions: List[Action] = []
+        self.stats.quarantined += snap.quarantined
+        # watchdog events first: this tick's rails already reflect them
+        tripped = False
+        for ev in self._pending_trips:
+            self._trip(ev, snap.now)
+            tripped = True
+        self._pending_trips = []
+        if self.faults is not None and self.faults.deadline_miss(snap.now):
+            self._trip("deadline_miss", snap.now)
+            tripped = True
         # §V error-tolerant tier: fold the observed escaped-SDC rate into
         # the cumulative back-off depth BEFORE programming rails, so this
         # tick's SetRails already carries the retreat.  One 10 mV step per
@@ -262,31 +364,70 @@ class LutController:
                 if self._sdc_clean >= self.sdc_hysteresis:
                     self._backoff -= 1
                     self._sdc_clean = 0
-        reason = self._replan_reason(snap, util)
-        if reason is not None:
-            plan, T = self.planner.plan_at(snap.t_amb, util, T0=self._T_warm)
-            self._T_warm = T
-            self._util_planned = (None if util is None
-                                  else np.asarray(util, np.float32))
-            self.plan = plan
-            self.stats.replans += 1
-            self.stats.replan_reasons.append(reason)
-            vc, vs = plan.v_core, plan.v_sram
-            source, plan_out = "solver", plan
-        else:
-            if self.field is not None:
-                vc, vs = self.field.lookup(snap.t_amb, util)
+        # stale-sensor fallback: the bus quarantined / lost the fresh
+        # ambient reading, so answer at last-good PLUS the guard band
+        # (conservatively hot => conservatively high rails) and never hand
+        # a stale value to the solver.
+        stale = (self.stale_after is not None
+                 and snap.t_amb_age > self.stale_after)
+        t_sense = snap.t_amb + (self.guard_band_c if stale else 0.0)
+        if stale:
+            self.stats.stale_fallbacks += 1
+        reason = None
+        if self._degrade == 0:
+            if not stale:
+                reason = self._replan_reason(snap, util)
+            elif (snap.t_max is not None
+                    and snap.t_max > TF.T_MAX_CHIP - self.t_headroom_c):
+                # chip-side thermal emergency outranks sensor staleness
+                reason = f"thermal_emergency({snap.t_max:.1f}C)"
+        if self._degrade >= 2 and self._last_rails is not None:
+            # watchdog level 2: freeze at the last programmed rails (which
+            # already carry any SDC back-off — do NOT re-add dv below)
+            vc, vs = self._last_rails
+            self.stats.frozen_ticks += 1
+            self.stats.degraded_ticks += 1
+            source, plan_out = "frozen", None
+        elif reason is not None:
+            faulted = (self.faults is not None
+                       and self.faults.solver_fault(snap.now))
+            plan = None
+            if not faulted:
+                plan, T = self.planner.plan_at(snap.t_amb, util,
+                                               T0=self._T_warm)
+                if not self._plan_ok(plan):
+                    faulted = True
+            if faulted:
+                # solver divergence: trip the watchdog and answer this
+                # tick from the fast path instead of programming garbage
+                self._trip("solver_divergence", snap.now)
+                tripped = True
+                vc, vs = self._fast_rails(t_sense, util)
+                self.stats.lut_hits += 1
+                source, plan_out = "lut", None
             else:
-                vc, vs = self.lut.lookup(snap.t_amb)
+                self._T_warm = T
+                self._util_planned = (None if util is None
+                                      else np.asarray(util, np.float32))
+                self.plan = plan
+                self.stats.replans += 1
+                self.stats.replan_reasons.append(reason)
+                vc, vs = plan.v_core, plan.v_sram
+                source, plan_out = "solver", plan
+        else:
+            vc, vs = self._fast_rails(t_sense, util)
+            if self._degrade == 1:
+                self.stats.degraded_ticks += 1
             self.stats.lut_hits += 1
             source, plan_out = "lut", None
-        if self._backoff > 0:
+        if self._backoff > 0 and source != "frozen":
             dv = np.float32(self._backoff * self.backoff_step_v)
             vc = np.minimum(np.asarray(vc, np.float32) + dv,
                             np.float32(TF.V_CORE_NOM))
             vs = np.minimum(np.asarray(vs, np.float32) + dv,
                             np.float32(TF.V_SRAM_NOM))
         actions.append(SetRails(vc, vs, source=source, plan=plan_out))
+        self._last_rails = (vc, vs)
         self._t_prev = snap.t_amb
 
         # straggler policy: boost while nominal rails can hold the clock
@@ -344,6 +485,31 @@ class LutController:
                     actions.append(Restore(chip))
                 else:
                     self._cool[chip] = ticks
+
+        # chips pinned to safe-state rails (rail-write NACK exhaustion):
+        # migrate their work once each so the planner rebalances around
+        # the nominal-rail island instead of budgeting scaled power for it
+        for chip in sorted(snap.safe_state):
+            if chip not in self._safe_seen:
+                self._safe_seen.add(chip)
+                self.stats.safe_states += 1
+                self.stats.rebalances += 1
+                actions.append(Rebalance(chip, "safe_state_rails"))
+
+        # watchdog hysteresis: one clean-tick window per de-escalation
+        # step (mirror of sdc_hysteresis), full recovery closes the
+        # episode and records its tick count
+        if tripped:
+            self._clean = 0
+        elif self._degrade > 0:
+            self._clean += 1
+            if self._clean >= self.watchdog_hysteresis:
+                self._degrade -= 1
+                self._clean = 0
+                if self._degrade == 0 and self._degrade_since is not None:
+                    self.stats.recover_ticks.append(
+                        float(snap.now - self._degrade_since))
+                    self._degrade_since = None
         return actions
 
 

@@ -10,6 +10,7 @@ poll).  Reports accumulate in ``history`` for run summaries.
 from __future__ import annotations
 
 import inspect
+import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
@@ -33,23 +34,41 @@ class LoopReport:
 
 
 class ControlLoop:
+    """``tick_deadline_s`` (off by default — replays must stay free of
+    wall-clock) arms a *measured* watchdog: a tick whose decide+apply
+    exceeds the deadline reports ``note_deadline_miss`` to the controller,
+    degrading the NEXT tick.  Deterministic chaos scripts deadline misses
+    through the fault model instead."""
+
     def __init__(self, bus: TelemetryBus, controller: Controller,
-                 actuators: Sequence):
+                 actuators: Sequence,
+                 tick_deadline_s: Optional[float] = None):
         self.bus = bus
         self.controller = controller
         self.actuators = list(actuators)
+        self.tick_deadline_s = tick_deadline_s
+        self.deadline_misses = 0
         self.history: List[LoopReport] = []
         self._wants_util = "util" in inspect.signature(
             controller.decide).parameters
 
     def step(self, now: float = 0.0,
              util: Optional[np.ndarray] = None) -> LoopReport:
+        t0 = time.monotonic() if self.tick_deadline_s is not None else None
         snap = self.bus.poll(now)
+        for act in self.actuators:  # clock write channels before actions
+            if hasattr(act, "begin_tick"):
+                act.begin_tick(now)
         actions = (self.controller.decide(snap, util=util)
                    if self._wants_util else self.controller.decide(snap))
         for a in actions:
             for act in self.actuators:
                 act.apply(a)
+        if (t0 is not None
+                and time.monotonic() - t0 > self.tick_deadline_s
+                and hasattr(self.controller, "note_deadline_miss")):
+            self.deadline_misses += 1
+            self.controller.note_deadline_miss()
         readouts = [act.settle(snap, util=util) for act in self.actuators
                     if hasattr(act, "settle")]
         rep = LoopReport(now=now, snapshot=snap, actions=list(actions),

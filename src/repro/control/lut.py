@@ -131,6 +131,9 @@ class RailField:
                       else np.asarray(p_nom, np.float64))
         if self.p_nom is not None and self.p_nom.shape != self.vc.shape:
             raise ValueError("p_nom must match the rail-table shape")
+        # observability: lookups that clamped below the utilization axis
+        # (conservative, but an excursion worth counting — ROADMAP item 3)
+        self.clamped_below = 0
 
     # ------------------------------------------------------------------
     @property
@@ -202,8 +205,13 @@ class RailField:
         per-chip ``(chips,)`` array — each chip interpolates the
         utilization axis at its own value (the cross-chip thermal coupling
         of a *non*-uniform load is the guard band's job; the pinned trust
-        contract holds on the solved uniform grid).  Both axes clamp.
+        contract holds on the solved uniform grid).  Both axes clamp; a
+        below-axis utilization clamp increments ``clamped_below`` (the
+        rails answered are the conservative ``u_min`` slice).
         """
+        if (util is not None and np.size(util)
+                and float(np.min(np.asarray(util))) < self.u_min - 1e-9):
+            self.clamped_below += 1
         vc, vs = self._interp((self.vc, self.vs), t_amb, util)
         return vc, vs
 

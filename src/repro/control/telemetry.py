@@ -35,15 +35,23 @@ import numpy as np
 
 @dataclass(frozen=True)
 class AmbientSample:
-    """Ambient (inlet) temperature from the thermal sensor [degC]."""
+    """Ambient (inlet) temperature from the thermal sensor [degC].
+
+    ``stamp`` is the poll time the reading was actually taken (None =
+    fresh, i.e. taken at the delivering poll).  A stale-repeat fault
+    (``control.faults``) carries the *original* stamp, which is how the
+    bus's freshness check catches it."""
     t_amb: float
+    stamp: Optional[float] = None
 
 
 @dataclass(frozen=True)
 class ChipTempSample:
     """Per-chip junction temperature field [degC] (from the actuator's
-    last thermal evaluation — the simulated TSD readout)."""
+    last thermal evaluation — the simulated TSD readout).  ``stamp`` as in
+    :class:`AmbientSample`."""
     t_chip: np.ndarray  # (chips,)
+    stamp: Optional[float] = None
 
 
 @dataclass(frozen=True)
@@ -93,6 +101,14 @@ class HeartbeatSample:
 
 
 @dataclass(frozen=True)
+class SafeStateSample:
+    """Chips the rail-write channel pinned to nominal safe-state rails
+    (retries exhausted) — reported by the :class:`~repro.control.actuator.
+    FleetActuator` so the controller can rebalance work around them."""
+    chips: FrozenSet[int]
+
+
+@dataclass(frozen=True)
 class SdcSample:
     """One tick's ABFT SDC counters (from ``repro.tolerance.SdcTelemetry``
     or a real checksum-counter readout): detected/corrected/escaped
@@ -104,7 +120,8 @@ class SdcSample:
 
 
 Sample = Union[AmbientSample, ChipTempSample, StepSample, TickSample,
-               UtilSample, StragglerSample, HeartbeatSample, SdcSample]
+               UtilSample, StragglerSample, HeartbeatSample, SdcSample,
+               SafeStateSample]
 
 
 # ---------------------------------------------------------------------------
@@ -139,6 +156,14 @@ class Snapshot:
     shares: Optional[np.ndarray] = None  # elastic per-chip work shares
     stragglers: List[StragglerSample] = field(default_factory=list)
     dead: FrozenSet[str] = frozenset()
+    # sample freshness [ticks since the last ACCEPTED reading]: 0 on a
+    # fresh tick, grows under sensor dropout/quarantine, inf before the
+    # first reading — the controller's stale-fallback trigger
+    t_amb_age: float = 0.0
+    t_chip_age: float = 0.0
+    quarantined: int = 0  # stale/range-violating samples rejected this tick
+    # chips the rail-write channel pinned to nominal (SafeStateSample)
+    safe_state: FrozenSet[int] = frozenset()
     # event-like ABFT SDC counters (summed over the tick's samples)
     sdc_detected: int = 0
     sdc_corrected: int = 0
@@ -188,14 +213,42 @@ class TelemetryBus:
     Scalar state (ambient, chip temps, queue depth) persists across ticks —
     a source that has nothing new simply returns ``[]`` and the last known
     value carries forward; events (stragglers) are delivered exactly once.
+
+    Temperature samples are **validated** before folding (the §9 fault
+    containment tier): a reading older than ``max_age`` ticks (per its
+    ``stamp``) or outside the plausibility range is *quarantined* — the
+    last-good value carries forward and its age keeps growing, which is
+    exactly the signal the controller's stale fallback keys on.  Honest
+    sources stamp nothing (stamp ``None`` = fresh) and always read
+    in-range, so validation is a no-op on a clean day.
     """
 
-    def __init__(self, sources: Sequence[TelemetrySource] = ()):
+    # plausibility ranges [degC]: anything outside is a sensor fault, not
+    # a reading (chips melt long before 200C; a machine room is not -60C)
+    T_AMB_VALID = (-40.0, 80.0)
+    T_CHIP_VALID = (-40.0, 200.0)
+
+    def __init__(self, sources: Sequence[TelemetrySource] = (),
+                 max_age: Optional[float] = 2.0):
         self.sources: List[TelemetrySource] = list(sources)
+        self.max_age = max_age
         self._state = Snapshot()
+        self._amb_stamp: Optional[float] = None   # last ACCEPTED ambient
+        self._chip_stamp: Optional[float] = None  # last ACCEPTED chip field
+        self.quarantined_total = 0
 
     def attach(self, source: TelemetrySource) -> None:
         self.sources.append(source)
+
+    def _valid(self, smp, now: float, rng) -> bool:
+        stamp = smp.stamp
+        if (self.max_age is not None and stamp is not None
+                and now - stamp > self.max_age):
+            return False  # stale-repeat: older than the freshness bound
+        v = np.asarray(smp.t_chip if isinstance(smp, ChipTempSample)
+                       else smp.t_amb, np.float64)
+        return bool(np.all(np.isfinite(v))
+                    and np.all(v >= rng[0]) and np.all(v <= rng[1]))
 
     def poll(self, now: float) -> Snapshot:
         s = self._state
@@ -203,14 +256,25 @@ class TelemetryBus:
         s.stragglers = []
         s.tokens = 0
         s.admitted = 0
+        s.quarantined = 0
         s.sdc_detected = s.sdc_corrected = 0
         s.sdc_escaped = s.sdc_checked = 0
         for src in self.sources:
             for smp in src.poll(now):
                 if isinstance(smp, AmbientSample):
+                    if not self._valid(smp, now, self.T_AMB_VALID):
+                        s.quarantined += 1
+                        continue
                     s.t_amb = float(smp.t_amb)
+                    self._amb_stamp = now
                 elif isinstance(smp, ChipTempSample):
+                    if not self._valid(smp, now, self.T_CHIP_VALID):
+                        s.quarantined += 1
+                        continue
                     s.t_chip = np.asarray(smp.t_chip)
+                    self._chip_stamp = now
+                elif isinstance(smp, SafeStateSample):
+                    s.safe_state = smp.chips
                 elif isinstance(smp, StepSample):
                     s.step_s = float(smp.step_s)
                 elif isinstance(smp, TickSample):
@@ -232,6 +296,11 @@ class TelemetryBus:
                     s.sdc_corrected += smp.corrected
                     s.sdc_escaped += smp.escaped
                     s.sdc_checked += smp.checked
+        self.quarantined_total += s.quarantined
+        s.t_amb_age = (float("inf") if self._amb_stamp is None
+                       else now - self._amb_stamp)
+        s.t_chip_age = (float("inf") if self._chip_stamp is None
+                        else now - self._chip_stamp)
         # hand the controller a stable copy; persistent state keeps arrays
         return Snapshot(now=s.now, t_amb=s.t_amb, t_chip=s.t_chip,
                         step_s=s.step_s, queued=s.queued, active=s.active,
@@ -239,6 +308,8 @@ class TelemetryBus:
                         admitted=s.admitted, oldest_wait=s.oldest_wait,
                         shares=s.shares,
                         stragglers=list(s.stragglers), dead=s.dead,
+                        t_amb_age=s.t_amb_age, t_chip_age=s.t_chip_age,
+                        quarantined=s.quarantined, safe_state=s.safe_state,
                         sdc_detected=s.sdc_detected,
                         sdc_corrected=s.sdc_corrected,
                         sdc_escaped=s.sdc_escaped,

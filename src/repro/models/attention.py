@@ -41,6 +41,29 @@ def _row_update(arr, new, start):
     )(arr, new.astype(arr.dtype), start)
 
 
+def _ring_scatter(arr, new, start, n_valid):
+    """Write ``new`` (B,S,...) into ring ``arr`` (B,T,...) at per-row offsets
+    modulo T.  Unlike ``_row_update`` (whose dynamic_update_slice *clamps*
+    ``start`` so a chunk touching the ring edge lands shifted), entries wrap
+    index-wise, and rows' padded tails (past ``n_valid``) are masked out so
+    they never overwrite live window entries.  Requires ``S <= T`` (one
+    chunk may not lap the window; scatter indices must stay unique)."""
+    T, S = arr.shape[1], new.shape[1]
+    if S > T:
+        raise ValueError(f"chunk of {S} tokens would lap the {T}-entry ring")
+    offs = jnp.arange(S, dtype=jnp.int32)
+    keep = (jnp.ones((new.shape[0], S), bool) if n_valid is None
+            else offs[None] < jnp.asarray(n_valid, jnp.int32)[:, None])
+
+    def row(a, n, s, kb):
+        idx = (s + offs) % T
+        upd = jnp.where(kb.reshape((S,) + (1,) * (a.ndim - 1)),
+                        n.astype(a.dtype), a[idx])
+        return a.at[idx].set(upd)
+
+    return jax.vmap(row)(arr, new, start, keep)
+
+
 def _new_pos_ids(positions, n_valid):
     """Position ids to record for an appended chunk: the absolute position,
     or -1 (invalid) past each row's ``n_valid`` real tokens."""
@@ -253,15 +276,31 @@ def gqa_decode(p, x, cache, pos, cfg: ModelConfig, plan: Plan, n_valid=None):
     T = cache["k"].shape[1]
     start = positions[:, 0] % T  # ring for SWA; == pos when T == max_len
     ids = _new_pos_ids(positions, n_valid)
-    k = _row_update(cache["k"], k_new, start)
-    v = _row_update(cache["v"], v_new, start)
-    pos_ids = _row_update(cache["pos_ids"], ids, start)  # (B,T)
-    valid = (pos_ids >= 0)[:, None, :] & \
-        (pos_ids[:, None, :] <= positions[..., None])
     if cfg.sliding_window:
-        valid &= pos_ids[:, None, :] > positions[..., None] - cfg.sliding_window
-    mask = valid[:, None, None]  # (B,1,1,S,T)
-    o = _sdpa(q, k, v, mask, plan)
+        # ring cache: token j of the chunk evicts the entry at
+        # (pos+j) % T, which for S > 1 may still be inside token i < j's
+        # window — so attend against the PRE-update ring plus the chunk's
+        # own K/V, then scatter (wrapped, padded tails masked off).
+        def win_mask(entry_pos):  # (B,T') -> (B,S,T') validity
+            e = entry_pos[:, None, :]
+            return ((e >= 0) & (e <= positions[..., None])
+                    & (e > positions[..., None] - cfg.sliding_window))
+        mask = jnp.concatenate(
+            [win_mask(cache["pos_ids"]), win_mask(ids)],
+            axis=-1)[:, None, None]  # (B,1,1,S,T+S)
+        o = _sdpa(q, jnp.concatenate([cache["k"], k_new], axis=1),
+                  jnp.concatenate([cache["v"], v_new], axis=1), mask, plan)
+        k = _ring_scatter(cache["k"], k_new, start, n_valid)
+        v = _ring_scatter(cache["v"], v_new, start, n_valid)
+        pos_ids = _ring_scatter(cache["pos_ids"], ids, start, n_valid)
+    else:
+        k = _row_update(cache["k"], k_new, start)
+        v = _row_update(cache["v"], v_new, start)
+        pos_ids = _row_update(cache["pos_ids"], ids, start)  # (B,T)
+        valid = (pos_ids >= 0)[:, None, :] & \
+            (pos_ids[:, None, :] <= positions[..., None])
+        mask = valid[:, None, None]  # (B,1,1,S,T)
+        o = _sdpa(q, k, v, mask, plan)
     o = jnp.einsum("bshd,hdk->bsk", o, p["wo"].astype(x.dtype))
     return o, {"k": k, "v": v, "pos_ids": pos_ids}
 

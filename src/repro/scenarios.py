@@ -70,6 +70,10 @@ class Scenario:
     # multiplicative SDC-rate disturbance trace (aging / supply-noise
     # spikes) fed to the replay's FaultInjector; None = quiet day (x1)
     sdc_noise: Optional[Callable[[float], float]] = None
+    # §9 chaos: a factory returning a fresh seeded ControlFaultModel per
+    # replay (a factory keeps Scenario pure data and every replay aligned
+    # on the same fault streams); None = clean control plane
+    chaos: Optional[Callable[[], "ctl.ControlFaultModel"]] = None
     description: str = ""
 
     def ambient_at(self, tick: int) -> float:
@@ -192,6 +196,44 @@ def serve_day(ticks: int = 14, hot: float = 42.0, cool: float = 12.0,
         description=f"hot window {hot}C, cool-down to {cool}C at {cool_at}")
 
 
+def chaos_day(ticks: int = 48, base: float = 25.0, amp: float = 7.0,
+              rate: float = 0.6, nack_rate: float = 0.45, seed: int = 0,
+              runaway_chip: int = 3, runaway_c: float = 93.5) -> Scenario:
+    """The §9 acceptance day: a diurnal trace carrying, in order, a sensor
+    storm (dropout/spike/stale/stuck bursts + one missed tick deadline), a
+    rail-write NACK burst (driving chips into safe-state rails), and a
+    thermal runaway on one chip (hotspot + a scripted solver fault, so the
+    watchdog — not the solver — must contain it).  A load dip below the
+    RailField's utilization axis rides along for the clamp counter.
+    Fingerprint-pinned: same seed -> the identical day."""
+    storm = (ticks // 6, ticks // 6 + max(ticks // 4, 3))
+    nack_w = (ticks // 2, ticks // 2 + max(ticks // 8, 2))
+    runaway_at = 3 * ticks // 4
+    d = diurnal(ticks, base, amp)
+
+    def load(now: float) -> float:
+        return 0.15 if storm[0] <= now < storm[0] + 2 else 0.9
+
+    return Scenario(
+        name="chaos_day", ticks=ticks,
+        ambient=d.ambient, load=load,
+        hotspots=tuple(Hotspot(t, runaway_chip, runaway_c)
+                       for t in range(runaway_at,
+                                      min(runaway_at + 3, ticks))),
+        chaos=lambda: ctl.ControlFaultModel(
+            rate=rate, seed=seed, nack=nack_rate,
+            # weight the mix toward dropout so the ambient stream loses
+            # enough consecutive ticks to trip the stale fallback (stuck
+            # replays keep resetting the age at the uniform rate/4 mix)
+            dropout=rate * 0.75,
+            sensor_window=storm, nack_window=nack_w,
+            # two consecutive missed deadlines: the ladder must reach
+            # level 2 (frozen last-applied rails) and climb back down
+            deadline_misses=(storm[0] + 1, storm[0] + 2),
+            solver_faults=(runaway_at,)),
+        description="sensor storm + rail NACK burst + thermal runaway")
+
+
 SCENARIOS: Dict[str, Callable[[], Scenario]] = {
     "diurnal": diurnal,
     "ambient_jump": ambient_jump,
@@ -200,6 +242,7 @@ SCENARIOS: Dict[str, Callable[[], Scenario]] = {
     "diurnal_load_spike": diurnal_load_spike,
     "sdc_storm": sdc_storm,
     "serve_day": serve_day,
+    "chaos_day": chaos_day,
 }
 
 
@@ -335,11 +378,30 @@ class ReplayResult:
     sdc_corrected: int = 0
     sdc_escaped: int = 0
     sdc_checked: int = 0
+    # §9 fault-containment ledger (all zero/empty on clean replays; NOT
+    # hashed into the fingerprint so pre-chaos pins are unchanged)
+    quarantined: int = 0
+    stale_fallbacks: int = 0
+    degraded_ticks: int = 0
+    frozen_ticks: int = 0
+    safe_states: int = 0
+    below_axis_clamps: int = 0
+    write_nacks: int = 0
+    write_retries: int = 0
+    watchdog_events: List[str] = dfield(default_factory=list)
+    recover_ticks: List[float] = dfield(default_factory=list)
 
     @property
     def escape_rate(self) -> float:
         """Cumulative escaped-SDC rate per checked MAC over the day."""
         return self.sdc_escaped / self.sdc_checked if self.sdc_checked else 0.0
+
+    @property
+    def mean_ticks_to_recover(self) -> float:
+        """Mean watchdog-episode length: trip -> back to normal (0 when the
+        day had no completed degrade episode)."""
+        return float(np.mean(self.recover_ticks)) if self.recover_ticks \
+            else 0.0
 
     @property
     def fingerprint(self) -> str:
@@ -357,7 +419,7 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
            = None, controller: Optional[ctl.LutController] = None,
            tick_s: float = 60.0, guard_band_c: float = 3.0,
            sweep=(10.0, 45.0, 8), util_sweep=(0.25, 1.0, 4),
-           injector=None) -> ReplayResult:
+           injector=None, faults=None) -> ReplayResult:
     """Run ``scenario`` through the full control loop; deterministic.
 
     ``controller=None`` builds the default RailField controller over the
@@ -371,6 +433,13 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
     scenario's ``sdc_noise`` trace, and samples the fleet's applied rails
     each tick through ``SdcTelemetry`` — pair it with a controller built
     with ``sdc_budget=...`` to close the back-off loop.
+
+    ``faults`` (a ``ControlFaultModel``; defaults to the scenario's own
+    ``chaos`` factory) attaches the §9 chaos plane: the ambient sensor and
+    the fleet TSDs are wrapped in ``ChaosTelemetry``, the fleet's rail
+    writes go through the verify-after-write NACK channel, and the
+    controller consumes the scripted watchdog ticks.  ``rate=0`` is the
+    identity model — every clean-day fingerprint is unchanged.
     """
     rt = runtime if runtime is not None else RT.EnergyAwareRuntime(
         TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
@@ -392,15 +461,26 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
     fleet = ctl.FleetActuator.from_runtime(
         rt, t_amb=scenario.ambient_at(0),
         field=getattr(controller, "field", None))
-    sources = [ctl.AmbientSensor(scenario.ambient),
-               _LoadTelemetry(scenario), mon, elastic, fleet]
+    if faults is None and scenario.chaos is not None:
+        faults = scenario.chaos()
+    amb_src, fleet_src = ctl.AmbientSensor(scenario.ambient), fleet
+    if faults is not None:
+        amb_src = ctl.ChaosTelemetry(amb_src, faults)
+        fleet_src = ctl.ChaosTelemetry(fleet, faults)
+        fleet.write_faults = faults
+        controller.faults = faults  # scripted deadline/solver-fault ticks
+    sources = [amb_src, _LoadTelemetry(scenario), mon, elastic, fleet_src]
     if injector is not None:
         from repro.tolerance.faults import SdcTelemetry
         injector.reset()
         if scenario.sdc_noise is not None:
             injector.noise = scenario.sdc_noise
         sources.append(SdcTelemetry(injector, fleet))
-    bus = ctl.TelemetryBus(sources)
+    # ticks are 1 apart: a stale-repeated stamp is >= 1 tick old, so the
+    # freshness bound must sit under one tick to quarantine it (stamps are
+    # only ever set by ChaosTelemetry — clean replays see no age at all)
+    bus = ctl.TelemetryBus(sources,
+                           max_age=0.75 if faults is not None else None)
     loop = ctl.ControlLoop(bus, controller, [fleet, elastic])
 
     # a reused controller (warm jits, shared field) must start the day
@@ -410,7 +490,10 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
         controller.reset()
     st = controller.stats
     base = (st.replans, st.lut_hits, st.boosts, st.rebalances,
-            len(st.replan_reasons), st.backoffs, st.restores)
+            len(st.replan_reasons), st.backoffs, st.restores,
+            st.quarantined, st.stale_fallbacks, st.degraded_ticks,
+            st.frozen_ticks, st.safe_states, st.below_axis_clamps,
+            len(st.watchdog_events), len(st.recover_ticks))
 
     steps_by_tick: Dict[int, List[StepRecord]] = {}
     for rec in scenario.steps:
@@ -455,7 +538,16 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
         sdc_detected=tot.detected if tot else 0,
         sdc_corrected=tot.corrected if tot else 0,
         sdc_escaped=tot.escaped if tot else 0,
-        sdc_checked=tot.checked if tot else 0)
+        sdc_checked=tot.checked if tot else 0,
+        quarantined=st.quarantined - base[7],
+        stale_fallbacks=st.stale_fallbacks - base[8],
+        degraded_ticks=st.degraded_ticks - base[9],
+        frozen_ticks=st.frozen_ticks - base[10],
+        safe_states=st.safe_states - base[11],
+        below_axis_clamps=st.below_axis_clamps - base[12],
+        write_nacks=fleet.write_nacks, write_retries=fleet.write_retries,
+        watchdog_events=list(st.watchdog_events[base[13]:]),
+        recover_ticks=list(st.recover_ticks[base[14]:]))
 
 
 # ---------------------------------------------------------------------------
@@ -480,6 +572,10 @@ class ServeReplayResult:
     outputs: Tuple[Tuple[int, ...], ...]  # rid-ordered generated tokens
     deferred: int = 0        # AdmissionController ledger (0 for baselines)
     forced: int = 0
+    # §9 thermal-emergency preemption ledger (0 unless preempt=True; NOT
+    # hashed, so pre-chaos serve fingerprints are unchanged)
+    preempts: int = 0        # slot evictions to the host page pool
+    preempted_reqs: int = 0  # distinct requests that were evicted
 
     @property
     def tokens_per_joule(self) -> float:
@@ -509,7 +605,7 @@ def serve_replay(scenario: Scenario, workload: RequestWorkload, model,
                  params, controller=None,
                  runtime: Optional[RT.EnergyAwareRuntime] = None,
                  admission: bool = False, defer_premium: float = 1.05,
-                 max_wait: Optional[float] = None,
+                 max_wait: Optional[float] = None, preempt: bool = False,
                  engine_steps: int = 6, tick_s: float = 60.0,
                  sweep=(10.0, 45.0, 4), util_sweep=(0.25, 1.0, 4),
                  batch_slots: int = 4, max_len: int = 64,
@@ -549,7 +645,8 @@ def serve_replay(scenario: Scenario, workload: RequestWorkload, model,
             controller = AdmissionController(
                 controller, defer_premium=defer_premium,
                 max_wait=(max_wait if max_wait is not None
-                          else 4.0 * engine_steps * scenario.ticks))
+                          else 4.0 * engine_steps * scenario.ticks),
+                preempt=preempt)
     if hasattr(controller, "reset"):
         controller.reset()
 
@@ -572,6 +669,9 @@ def serve_replay(scenario: Scenario, workload: RequestWorkload, model,
                              else (0, 0))
     vocab = model.cfg.vocab_size
     by_tick = workload.by_tick()
+    hot_by_tick: Dict[int, List[Hotspot]] = {}
+    for h in scenario.hotspots:
+        hot_by_tick.setdefault(h.tick, []).append(h)
     reqs: Dict[int, Request] = {}
     powers: List[float] = []
     caps: List[int] = []
@@ -586,6 +686,9 @@ def serve_replay(scenario: Scenario, workload: RequestWorkload, model,
             eng.submit(req)
         for _ in range(engine_steps):
             eng.step()
+        for h in hot_by_tick.get(tick, ()):
+            fleet.T = np.asarray(fleet.T).copy()
+            fleet.T[h.chip] = h.t_chip  # cooling fault under live traffic
         rep = loop.step(now=float(tick))
         powers.append(rep.readout.pod_power_w)
         caps.append(-1 if eng.admit_cap is None else int(eng.admit_cap))
@@ -606,4 +709,74 @@ def serve_replay(scenario: Scenario, workload: RequestWorkload, model,
         deferred=(adm_stats.deferred - base_def
                   if isinstance(controller, AdmissionController) else 0),
         forced=(adm_stats.forced - base_forced
-                if isinstance(controller, AdmissionController) else 0))
+                if isinstance(controller, AdmissionController) else 0),
+        preempts=eng.preempts,
+        preempted_reqs=sum(1 for r in reqs.values() if r.preempts > 0))
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke: python -m repro.scenarios <scenario> [--quick] [--json]
+# ---------------------------------------------------------------------------
+
+
+def _main(argv=None) -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.scenarios",
+        description="replay one scenario twice and verify the determinism "
+                    "pin (same fingerprint) and the thermal envelope")
+    ap.add_argument("scenario", choices=sorted(SCENARIOS))
+    ap.add_argument("--quick", action="store_true",
+                    help="16-tick day on a coarse sweep (CI smoke)")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+
+    sc = SCENARIOS[args.scenario](ticks=16) if args.quick \
+        else SCENARIOS[args.scenario]()
+    from repro.control.lut import sweep_points
+    rt = RT.EnergyAwareRuntime(
+        TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                     collective_s=0.2),
+        policy="power_save")
+    sweep = (15.0, 40.0, 4) if args.quick else (10.0, 45.0, 8)
+    controller = rt.controller(
+        field=rt.build_field(sweep_points(*sweep),
+                             sweep_points(0.25, 1.0, 3 if args.quick else 4)),
+        guard_band_c=3.0)
+    a = replay(sc, runtime=rt, controller=controller)
+    b = replay(sc, runtime=rt, controller=controller)
+    assert a.fingerprint == b.fingerprint, \
+        f"replay not deterministic: {a.fingerprint} != {b.fingerprint}"
+    assert a.t_max < TF.T_MAX_CHIP, \
+        f"thermal envelope violated: {a.t_max:.1f}C >= {TF.T_MAX_CHIP}C"
+    out = {
+        "scenario": a.name, "ticks": a.ticks, "fingerprint": a.fingerprint,
+        "replans": a.replans, "lut_hits": a.lut_hits,
+        "mean_saving": round(a.mean_saving, 4), "t_max": round(a.t_max, 2),
+        "quarantined": a.quarantined, "stale_fallbacks": a.stale_fallbacks,
+        "degraded_ticks": a.degraded_ticks, "frozen_ticks": a.frozen_ticks,
+        "safe_states": a.safe_states, "write_nacks": a.write_nacks,
+        "below_axis_clamps": a.below_axis_clamps,
+        "watchdog_events": a.watchdog_events,
+        "mean_ticks_to_recover": a.mean_ticks_to_recover,
+    }
+    if args.json:
+        print(json.dumps(out, indent=2))
+    else:
+        print(f"[{out['scenario']}] deterministic over {out['ticks']} ticks"
+              f" (fingerprint {out['fingerprint']})")
+        for k in ("replans", "lut_hits", "mean_saving", "t_max",
+                  "quarantined", "stale_fallbacks", "degraded_ticks",
+                  "frozen_ticks", "safe_states", "write_nacks",
+                  "below_axis_clamps", "mean_ticks_to_recover"):
+            print(f"  {k:>22}: {out[k]}")
+        if out["watchdog_events"]:
+            print(f"  {'watchdog_events':>22}: "
+                  + ", ".join(out["watchdog_events"]))
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised by CI smoke
+    raise SystemExit(_main())

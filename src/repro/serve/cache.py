@@ -105,8 +105,18 @@ class KVCacheManager:
             return jax.tree_util.tree_map_with_path(
                 inv, self.batch_axes, cache)
 
+        def _gather(cache, slot_ids):
+            def take(ax, ec):
+                if ax == NO_AXIS:
+                    return ec
+                ecm = jnp.moveaxis(ec, ax, 0)
+                return jnp.moveaxis(ecm[slot_ids], 0, ax)
+
+            return jax.tree_util.tree_map(take, self.batch_axes, cache)
+
         self._scatter = jax.jit(_scatter)
         self._invalidate = jax.jit(_invalidate)
+        self._gather = jax.jit(_gather)
 
     # -- slot lifecycle -------------------------------------------------------
     @property
@@ -126,7 +136,16 @@ class KVCacheManager:
         return slot
 
     def free(self, slot: int):
-        """Recycle a slot: pages return to the pool, row marked invalid."""
+        """Recycle a slot: pages return to the pool, row marked invalid.
+
+        Raises on double-free or free-of-unallocated: a silent accept
+        would duplicate the slot in the free list, hand it to two requests
+        at once, and corrupt the page accounting."""
+        if not 0 <= slot < self.slots:
+            raise ValueError(
+                f"free of invalid slot {slot} (valid: 0..{self.slots - 1})")
+        if slot in self._free:
+            raise ValueError(f"double free of slot {slot}")
         self.pos[slot] = 0
         self.lengths[slot] = 0
         self._free.append(slot)
@@ -152,10 +171,67 @@ class KVCacheManager:
         self.cache = self._scatter(self.cache, rows,
                                    jnp.asarray(slot_ids, jnp.int32))
 
+    def read_rows(self, slot_ids):
+        """Gather cache rows (batch == len(slot_ids)) out of slots — the
+        device->host read of thermal-emergency preemption."""
+        return self._gather(self.cache, jnp.asarray(slot_ids, jnp.int32))
+
+    def restore(self, slot: int, rows, pos: int):
+        """Scatter one preempted row set back into a (re)allocated slot and
+        rewind its decode position — the resume half of preemption.  Rows
+        captured before an :class:`ExpandableKVCacheManager` growth are
+        padded out to the current leaf shapes (fill -1 for ``pos_ids``)."""
+
+        def fit(path, ax, row, cur):
+            widths, need = [], False
+            for i, (r, c) in enumerate(zip(row.shape, cur.shape)):
+                if i == ax:
+                    widths.append((0, 0))
+                else:
+                    widths.append((0, max(c - r, 0)))
+                    need = need or c > r
+            if not need:
+                return row
+            fill = -1 if _is_pos_ids(path) else 0
+            return jnp.pad(jnp.asarray(row), widths, constant_values=fill)
+
+        rows = jax.tree_util.tree_map_with_path(
+            fit, self.batch_axes, rows, self.cache)
+        self.write_rows([slot], rows)
+        self.pos[slot] = int(pos)
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+
     def advance(self, slot_ids, counts):
         for s, n in zip(slot_ids, counts):
             self.pos[s] += int(n)
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
+
+
+class HostPagePool:
+    """Host-side page pool for preempted requests: evicted KV rows live in
+    host memory (``jax.device_get``) keyed by request id until resumption.
+    The device cache slot is freed meanwhile — preemption actually returns
+    pages to the admission pool, it does not just hide them."""
+
+    def __init__(self):
+        self._rows: Dict[Any, Any] = {}
+        self.puts = 0
+        self.peak = 0
+
+    def put(self, rid, rows, pos: int) -> None:
+        self._rows[rid] = (jax.device_get(rows), int(pos))
+        self.puts += 1
+        self.peak = max(self.peak, len(self._rows))
+
+    def take(self, rid):
+        """Pop (rows, pos) for a request being resumed."""
+        return self._rows.pop(rid)
+
+    def __contains__(self, rid) -> bool:
+        return rid in self._rows
+
+    def __len__(self) -> int:
+        return len(self._rows)
 
 
 class ExpandableKVCacheManager(KVCacheManager):

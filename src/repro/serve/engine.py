@@ -42,7 +42,8 @@ import numpy as np
 from repro.control.telemetry import TickSample
 from repro.models.model import Model
 from repro.serve import scheduler as sched
-from repro.serve.cache import ExpandableKVCacheManager, KVCacheManager
+from repro.serve.cache import (ExpandableKVCacheManager, HostPagePool,
+                               KVCacheManager)
 from repro.serve.step import sample
 
 
@@ -51,12 +52,14 @@ class Request:
     rid: int
     prompt: np.ndarray  # (P,) int32
     max_new: int = 16
+    priority: int = 0     # lower preempts first under thermal emergency
     out: List[int] = field(default_factory=list)
     done: bool = False
     error: Optional[str] = None
     fed: int = 0          # prompt tokens already written to the cache
     submit_tick: int = 0  # engine tick at submission (queue-age / SLO)
     finish_tick: int = 0
+    preempts: int = 0     # times evicted to the host page pool
 
 
 class Engine:
@@ -77,15 +80,20 @@ class Engine:
         self.prefill_chunk = max(1, min(prefill_chunk, max_len))
         cfg = model.cfg
         # ragged chunked prefill needs position-table masking all the way
-        # down; recurrent state (ssm/hybrid) and ring buffers (sliding
-        # window) would absorb the padded chunk tails
+        # down; recurrent state (ssm/hybrid) would absorb the padded chunk
+        # tails.  Ring buffers (sliding window) ride the ragged path too —
+        # the masked per-row ring scatter keeps padded tails out — as long
+        # as one chunk cannot lap the window
         self._ragged = (cfg.family in ("dense", "moe")
-                        and not cfg.sliding_window)
+                        and (not cfg.sliding_window
+                             or self.prefill_chunk <= cfg.sliding_window))
         mgr_cls = ExpandableKVCacheManager if expandable else KVCacheManager
         self.mgr = mgr_cls(model, batch_slots, max_len, page_size=page_size)
         self.slot_req: List[Optional[Request]] = [None] * self.B
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        self.pool = HostPagePool()  # preempted KV rows, host side
+        self.preempts = 0
         self.key = jax.random.PRNGKey(seed)
         # control plane: admission throttle + tick telemetry subscribers
         self.admit_cap = admit_cap
@@ -132,6 +140,17 @@ class Engine:
         admitted = 0
         while self.queue and self.mgr.free_slots and admitted < cap:
             req = self.queue.pop(0)
+            if req.rid in self.pool:
+                # resume a preempted request: its KV rows come back from
+                # the host page pool bit for bit — no recompute, no drift
+                slot = self.mgr.allocate(len(req.prompt))
+                rows, pos = self.pool.take(req.rid)
+                if isinstance(self.mgr, ExpandableKVCacheManager):
+                    self.mgr.ensure(pos + 1)
+                self.mgr.restore(slot, rows, pos)
+                self.slot_req[slot] = req
+                admitted += 1
+                continue
             if len(req.prompt) >= self.max_len:
                 req.done = True
                 req.error = "prompt_too_long"
@@ -145,6 +164,34 @@ class Engine:
                 self._prefill_into(slot, req)
             admitted += 1
         return admitted
+
+    # -- thermal-emergency preemption -----------------------------------------
+    def preempt_to(self, keep_active: int) -> int:
+        """Evict active slots until at most ``keep_active`` stay busy (the
+        :class:`~repro.control.controller.Preempt` actuation).  Victims are
+        the lowest-priority, newest requests; each one's KV rows move to the
+        host page pool, its device slot is freed (pages actually return to
+        the admission budget), and the request re-queues at the head for
+        bitwise-identical resumption.  Returns the eviction count."""
+        active = [(s, r) for s, r in enumerate(self.slot_req)
+                  if r is not None]
+        n_evict = len(active) - max(int(keep_active), 0)
+        if n_evict <= 0:
+            return 0
+        victims = sorted(active, key=lambda sr: (sr[1].priority,
+                                                 -sr[1].submit_tick,
+                                                 -sr[0]))[:n_evict]
+        requeue = []
+        for slot, req in sorted(victims, key=lambda sr: sr[1].submit_tick):
+            rows = self.mgr.read_rows([slot])
+            self.pool.put(req.rid, rows, int(self.mgr.pos[slot]))
+            self.slot_req[slot] = None
+            self.mgr.free(slot)
+            req.preempts += 1
+            self.preempts += 1
+            requeue.append(req)
+        self.queue[:0] = requeue  # resume first, oldest first
+        return n_evict
 
     def _prefill_into(self, slot: int, req: Request):
         """Stateful-family path: exact-length prefill, scatter one row."""

@@ -1,5 +1,7 @@
 """Thermal-aware admission co-scheduling (repro.control.admission) +
 the §8 serving acceptance day (scenarios.serve_replay)."""
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -153,6 +155,31 @@ class TestServeReplayAcceptance:
         assert thru.max_wait <= self.SLO and therm.max_wait <= self.SLO
         assert therm.deferred > 0  # the hot window was actually deferred
         assert therm.tokens_per_joule > thru.tokens_per_joule
+
+    def test_thermal_emergency_preempts_and_resumes_identically(
+            self, rt, field, dense):
+        """§9 escalation tail: a junction-temperature runaway while slots
+        are busy must Preempt active low-priority requests (KV to the host
+        page pool) and the requeued requests must finish with the very
+        same greedy tokens as the undisturbed baseline run."""
+        model, params = dense
+        day = sc.serve_day(ticks=10, hot=42.0, cool=12.0, cool_at=5)
+        # runaway lands AFTER the cool-down, when the backlog has been
+        # bulk-admitted and the slots are actually busy
+        day = dataclasses.replace(
+            day, hotspots=tuple(sc.Hotspot(t, 0, TF.T_MAX_CHIP - 1.0)
+                                for t in (6, 7)))
+        wl = sc.poisson_burst(burst_at=1, burst_n=6, tail_ticks=2, seed=0)
+        mk = lambda: LutController(rt.planner, field=field, guard_band_c=3.0)
+        thru = sc.serve_replay(day, wl, model, params, controller=mk(),
+                               runtime=rt)
+        therm = sc.serve_replay(
+            day, wl, model, params, runtime=rt,
+            controller=AdmissionController(mk(), defer_premium=1.05,
+                                           max_wait=240.0, preempt=True))
+        assert therm.preempts > 0 and therm.preempted_reqs > 0
+        assert therm.outputs == thru.outputs  # bitwise-identical resumption
+        assert therm.finished == thru.finished == len(wl.arrivals)
 
     def test_replay_is_fingerprint_pinned(self, rt, field, dense, runs):
         wl, _, therm = runs

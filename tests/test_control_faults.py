@@ -1,0 +1,406 @@
+"""§9 fault containment (repro.control.faults + the hardened loop).
+
+The design contract pinned here: the fault model is seeded/deterministic
+and rate-0 is bitwise identity; the bus quarantines implausible/stale
+samples and carries last-good forward with growing age; the controller
+answers stale ticks at last-good + guard band, survives solver divergence
+and missed deadlines through the watchdog ladder (fast-path-only ->
+frozen rails -> hysteresis recovery); the rail-write channel retries with
+backoff and pins exhausted chips to nominal safe-state rails which the
+planner then rebalances around; and ``scenarios.chaos_day`` replays the
+whole escalation fingerprint-pinned without ever exceeding the junction
+limit."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import scenarios as sc
+from repro import control as ctl
+from repro.control import LutController, Rebalance, SetRails
+from repro.control.telemetry import (AmbientSample, SafeStateSample,
+                                     Snapshot, TelemetryBus)
+from repro.core import runtime as RT
+from repro.core import tpu_fleet as TF
+from repro.control.lut import sweep_points
+
+T_KNOTS = sweep_points(10.0, 45.0, 4)
+U_KNOTS = sweep_points(0.25, 1.0, 4)
+
+
+@pytest.fixture(scope="module")
+def runtime():
+    prof = TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                        collective_s=0.2)
+    return RT.EnergyAwareRuntime(prof, policy="power_save")
+
+
+@pytest.fixture(scope="module")
+def field(runtime):
+    return runtime.build_field(T_KNOTS, U_KNOTS)
+
+
+def _ctl(runtime, field, **kw):
+    kw.setdefault("guard_band_c", 3.0)
+    return LutController(runtime.planner, field=field, **kw)
+
+
+def _rails(actions):
+    rails = [a for a in actions if isinstance(a, SetRails)]
+    assert len(rails) == 1
+    return rails[0]
+
+
+# ---------------------------------------------------------------------------
+# the fault model itself
+# ---------------------------------------------------------------------------
+
+
+class TestFaultModel:
+    def test_rate_zero_is_identity(self):
+        fm = ctl.ControlFaultModel(rate=0.0)
+        for t in range(24):
+            assert fm.sensor_fault(float(t)) is None
+            assert not fm.nack(8, float(t), 0).any()
+            assert not fm.deadline_miss(float(t))
+            assert not fm.solver_fault(float(t))
+
+    def test_seeded_and_reset_replays_identically(self):
+        fm = ctl.ControlFaultModel(rate=0.8, seed=3)
+        sensors = [fm.sensor_fault(float(t)) for t in range(64)]
+        nacks = [fm.nack(16, float(t), 0).tolist() for t in range(16)]
+        fm.reset()
+        assert [fm.sensor_fault(float(t)) for t in range(64)] == sensors
+        assert [fm.nack(16, float(t), 0).tolist()
+                for t in range(16)] == nacks
+        assert any(s is not None for s in sensors)  # faults actually drawn
+        assert any(any(m) for m in nacks)
+        other = ctl.ControlFaultModel(rate=0.8, seed=4)
+        assert [other.sensor_fault(float(t)) for t in range(64)] != sensors
+
+    def test_window_gates_without_shifting_the_stream(self):
+        """Draws happen every call (stream alignment), but outside the
+        window the channel is clean — so a windowed model agrees with the
+        unwindowed one *inside* the window, draw for draw."""
+        win = ctl.ControlFaultModel(rate=1.0, seed=0, sensor_window=(5, 10))
+        full = ctl.ControlFaultModel(rate=1.0, seed=0)
+        got = [win.sensor_fault(float(t)) for t in range(15)]
+        ref = [full.sensor_fault(float(t)) for t in range(15)]
+        assert [g is not None for g in got] == [5 <= t < 10
+                                               for t in range(15)]
+        assert got[5:10] == ref[5:10]
+
+    def test_scripted_watchdog_ticks(self):
+        fm = ctl.ControlFaultModel(deadline_misses=(3,), solver_faults=(7,))
+        assert fm.deadline_miss(3.0) and fm.deadline_miss(3.4)
+        assert not fm.deadline_miss(4.0)
+        assert fm.solver_fault(7.0) and not fm.solver_fault(3.0)
+
+
+# ---------------------------------------------------------------------------
+# sensor-side corruption + bus quarantine
+# ---------------------------------------------------------------------------
+
+
+def _one_class(cls, **kw):
+    """A model where every in-window draw lands on exactly one class."""
+    p = {c: 0.0 for c in ("dropout", "spike", "stale", "stuck")}
+    p[cls] = 1.0
+    return ctl.ControlFaultModel(seed=0, **p, **kw)
+
+
+class TestChaosTelemetry:
+    def _src(self):
+        return ctl.AmbientSensor(lambda now: 20.0 + now)
+
+    def test_dropout_loses_the_sample(self):
+        wrap = ctl.ChaosTelemetry(self._src(), _one_class("dropout"))
+        assert wrap.poll(0.0) == []
+
+    def test_spike_offsets_by_spike_c(self):
+        wrap = ctl.ChaosTelemetry(self._src(), _one_class("spike"))
+        (smp,) = wrap.poll(0.0)
+        assert smp.t_amb == pytest.approx(20.0 + 500.0)
+
+    def test_stale_replays_the_old_sample_with_its_old_stamp(self):
+        wrap = ctl.ChaosTelemetry(self._src(), _one_class("stale"))
+        (first,) = wrap.poll(0.0)  # nothing to repeat yet: passes clean
+        assert first.t_amb == 20.0 and first.stamp is None
+        (rep,) = wrap.poll(1.0)
+        assert rep.t_amb == 20.0  # yesterday's value...
+        assert rep.stamp == 0.0   # ...with yesterday's stamp (age catches it)
+
+    def test_stuck_freezes_the_value_with_fresh_stamps(self):
+        fm = _one_class("stuck", sensor_window=(0, 1), stuck_ticks=3)
+        wrap = ctl.ChaosTelemetry(self._src(), fm)
+        vals = [wrap.poll(float(t))[0] for t in range(4)]
+        # frozen at the tick-0 reading for stuck_ticks polls, fresh stamps
+        assert [s.t_amb for s in vals] == [20.0, 20.0, 20.0, 23.0]
+        assert all(s.stamp is None for s in vals)  # undetectable by the bus
+
+    def test_rate_zero_wrapper_is_bitwise_identity(self):
+        src = self._src()
+        wrap = ctl.ChaosTelemetry(src, ctl.ControlFaultModel(rate=0.0))
+        for t in range(8):
+            assert wrap.poll(float(t)) == src.poll(float(t))
+
+
+class _Script:
+    """A source replaying a fixed per-tick sample script."""
+
+    def __init__(self, rows):
+        self.rows = rows
+
+    def poll(self, now):
+        return self.rows[int(now)]
+
+
+class TestBusQuarantine:
+    def test_implausible_sample_is_quarantined_last_good_carries(self):
+        bus = TelemetryBus([_Script([
+            [AmbientSample(25.0)],
+            [AmbientSample(525.0)],   # spike: outside T_AMB_VALID
+            [],                       # dropout
+            [AmbientSample(24.0)],
+        ])], max_age=0.75)
+        s0 = bus.poll(0.0)
+        assert (s0.t_amb, s0.t_amb_age, s0.quarantined) == (25.0, 0.0, 0)
+        s1 = bus.poll(1.0)
+        assert s1.quarantined == 1
+        assert s1.t_amb == 25.0 and s1.t_amb_age == 1.0  # last-good ages
+        s2 = bus.poll(2.0)
+        assert s2.quarantined == 0 and s2.t_amb_age == 2.0
+        s3 = bus.poll(3.0)
+        assert (s3.t_amb, s3.t_amb_age) == (24.0, 0.0)
+        assert bus.quarantined_total == 1
+
+    def test_stale_stamp_is_quarantined_by_age(self):
+        bus = TelemetryBus([_Script([
+            [AmbientSample(25.0, stamp=0.0)],
+            [AmbientSample(25.0, stamp=0.0)],  # replayed: 1 tick old
+        ])], max_age=0.75)
+        assert bus.poll(0.0).t_amb == 25.0
+        s1 = bus.poll(1.0)
+        assert s1.quarantined == 1 and s1.t_amb_age == 1.0
+
+    def test_age_is_infinite_before_any_accepted_reading(self):
+        bus = TelemetryBus([_Script([[AmbientSample(525.0)]])],
+                           max_age=0.75)
+        s = bus.poll(0.0)
+        assert s.t_amb is None and np.isinf(s.t_amb_age)
+
+    def test_safe_state_sample_folds(self):
+        bus = TelemetryBus([_Script([
+            [AmbientSample(25.0), SafeStateSample(frozenset({3, 7}))],
+        ])])
+        assert bus.poll(0.0).safe_state == frozenset({3, 7})
+
+
+# ---------------------------------------------------------------------------
+# controller: stale fallback + watchdog ladder
+# ---------------------------------------------------------------------------
+
+
+class TestStaleFallback:
+    def test_stale_ambient_answers_at_guard_banded_last_good(self, runtime,
+                                                             field):
+        c = _ctl(runtime, field, stale_after=2.0)
+        acts = c.decide(Snapshot(now=0.0, t_amb=25.0, t_amb_age=5.0))
+        vc, vs = field.lookup(25.0 + c.guard_band_c)  # conservatively hot
+        assert np.allclose(_rails(acts).v_core, vc)
+        assert np.allclose(_rails(acts).v_sram, vs)
+        assert c.stats.stale_fallbacks == 1
+        assert c.stats.replans == 0  # a stale value never reaches the solver
+        fresh_vc, _ = field.lookup(25.0)
+        assert np.median(_rails(acts).v_core) >= np.median(fresh_vc)
+
+    def test_thermal_emergency_outranks_staleness(self, runtime, field):
+        c = _ctl(runtime, field, stale_after=2.0)
+        hot = np.full(field.chips, TF.T_MAX_CHIP - 1.0)
+        c.decide(Snapshot(now=0.0, t_amb=25.0, t_amb_age=5.0, t_chip=hot))
+        assert c.stats.replans == 1
+        assert c.stats.replan_reasons[-1].startswith("thermal_emergency")
+
+
+class TestWatchdogLadder:
+    def test_trip_degrade_freeze_and_hysteresis_recovery(self, runtime,
+                                                         field):
+        c = _ctl(runtime, field, watchdog_hysteresis=2)
+        r0 = _rails(c.decide(Snapshot(now=0.0, t_amb=25.0)))
+        assert r0.source == "solver"  # cold start replans
+
+        c.note_deadline_miss()
+        r1 = _rails(c.decide(Snapshot(now=1.0, t_amb=25.0)))
+        assert r1.source == "lut"  # level 1: fast path only
+        assert c._degrade == 1 and c.stats.degraded_ticks == 1
+
+        c.note_deadline_miss()
+        r2 = _rails(c.decide(Snapshot(now=2.0, t_amb=31.0)))
+        assert r2.source == "frozen"  # level 2: ambient moved, rails do not
+        assert np.array_equal(r2.v_core, r1.v_core)
+        assert np.array_equal(r2.v_sram, r1.v_sram)
+        assert c.stats.frozen_ticks == 1
+
+        # two clean ticks per de-escalation step; full recovery at tick 6
+        for t in (3, 4, 5):
+            c.decide(Snapshot(now=float(t), t_amb=25.0))
+        assert c._degrade == 1
+        r6 = _rails(c.decide(Snapshot(now=6.0, t_amb=25.0)))
+        assert c._degrade == 0 and r6.source in ("lut", "solver")
+        assert c.stats.recover_ticks == [5.0]  # tripped at 1, clean at 6
+        assert c.stats.watchdog_events == ["deadline_miss@1",
+                                           "deadline_miss@2"]
+
+    def test_scripted_solver_divergence_answers_from_the_fast_path(
+            self, runtime, field):
+        fm = ctl.ControlFaultModel(solver_faults=(0,))
+        c = _ctl(runtime, field, faults=fm)
+        acts = c.decide(Snapshot(now=0.0, t_amb=25.0))  # cold start replan…
+        assert _rails(acts).source == "lut"  # …diverges -> fast path
+        assert c.stats.replans == 0
+        assert c.stats.watchdog_events == ["solver_divergence@0"]
+        assert c._degrade == 1
+
+    def test_loop_deadline_miss_feeds_the_watchdog(self, runtime, field):
+        c = _ctl(runtime, field)
+        fleet = ctl.FleetActuator.from_runtime(runtime, t_amb=25.0,
+                                               field=field)
+        bus = TelemetryBus([ctl.AmbientSensor(lambda now: 25.0), fleet])
+        loop = ctl.ControlLoop(bus, c, [fleet], tick_deadline_s=0.0)
+        loop.step()
+        loop.step()  # the miss noted on tick 0 trips on tick 1
+        assert loop.deadline_misses == 2
+        assert c._degrade >= 1
+        assert any(e.startswith("deadline_miss")
+                   for e in c.stats.watchdog_events)
+
+    def test_safe_state_chips_are_rebalanced_once(self, runtime, field):
+        c = _ctl(runtime, field)
+        snap = Snapshot(now=0.0, t_amb=25.0, safe_state=frozenset({2, 5}))
+        acts = c.decide(snap)
+        reb = [a for a in acts if isinstance(a, Rebalance)
+               and a.reason == "safe_state_rails"]
+        assert sorted(r.chip for r in reb) == [2, 5]
+        assert c.stats.safe_states == 2
+        again = c.decide(Snapshot(now=1.0, t_amb=25.0,
+                                  safe_state=frozenset({2, 5})))
+        assert not any(isinstance(a, Rebalance) for a in again)
+
+
+# ---------------------------------------------------------------------------
+# actuator: verify-after-write retry -> safe state
+# ---------------------------------------------------------------------------
+
+
+class TestRailWriteChannel:
+    def _fleet(self, runtime, field, fm):
+        fleet = ctl.FleetActuator.from_runtime(runtime, t_amb=25.0,
+                                               field=field)
+        fleet.write_faults = fm
+        return fleet
+
+    def _set(self, field):
+        vc, vs = field.lookup(25.0)
+        return SetRails(np.asarray(vc, np.float32),
+                        np.asarray(vs, np.float32), source="lut")
+
+    def test_total_nack_exhausts_retries_and_pins_safe_state(self, runtime,
+                                                             field):
+        fleet = self._fleet(runtime, field, ctl.ControlFaultModel(nack=1.0))
+        fleet.begin_tick(0.0)
+        fleet.apply(self._set(field))
+        chips = fleet.v_core.shape[0]
+        assert fleet.safe_state == set(range(chips))
+        assert np.all(fleet.v_core == np.float32(TF.V_CORE_NOM))
+        assert np.all(fleet.v_sram == np.float32(TF.V_SRAM_NOM))
+        assert fleet.write_retries == chips * fleet.max_retries
+        assert fleet.backoff_wait_us > 0
+        assert len(fleet.safe_log) == chips
+        smp = [s for s in fleet.poll(0.0)
+               if isinstance(s, SafeStateSample)]
+        assert len(smp) == 1 and smp[0].chips == frozenset(range(chips))
+
+    def test_partial_nack_retries_then_lands_the_write(self, runtime,
+                                                       field):
+        fm = ctl.ControlFaultModel(nack=0.4, seed=1)
+        fleet = self._fleet(runtime, field, fm)
+        fleet.begin_tick(0.0)
+        act = self._set(field)
+        fleet.apply(act)
+        # p^4 ~ 2.6% per chip: with 256 chips some retries happen, and at
+        # most a handful of chips exhaust into safe state
+        assert fleet.write_retries > 0
+        ok = [c for c in range(fleet.v_core.shape[0])
+              if c not in fleet.safe_state]
+        assert len(ok) > fleet.v_core.shape[0] * 0.9
+        assert np.allclose(fleet.v_core[ok], np.asarray(act.v_core)[ok])
+
+    def test_safe_state_ignores_writes_until_cleared(self, runtime, field):
+        fleet = self._fleet(
+            runtime, field,
+            ctl.ControlFaultModel(nack=1.0, nack_window=(0, 1)))
+        fleet.begin_tick(0.0)
+        act = self._set(field)
+        fleet.apply(act)  # in-window: everything pins
+        fleet.clear_safe_state(0)
+        fleet.begin_tick(5.0)  # outside the window: writes succeed
+        fleet.apply(act)
+        assert fleet.v_core[0] == np.float32(np.asarray(act.v_core)[0])
+        assert np.all(fleet.v_core[1:] == np.float32(TF.V_CORE_NOM))
+
+    def test_rate_zero_write_channel_is_identity(self, runtime, field):
+        clean = ctl.FleetActuator.from_runtime(runtime, t_amb=25.0,
+                                               field=field)
+        fleet = self._fleet(runtime, field, ctl.ControlFaultModel(rate=0.0))
+        fleet.begin_tick(0.0)
+        act = self._set(field)
+        clean.apply(act)
+        fleet.apply(act)
+        assert np.array_equal(fleet.v_core, clean.v_core)
+        assert np.array_equal(fleet.v_sram, clean.v_sram)
+        assert fleet.write_nacks == 0 and not fleet.safe_state
+
+
+# ---------------------------------------------------------------------------
+# the §9 acceptance day
+# ---------------------------------------------------------------------------
+
+
+class TestChaosDay:
+    @pytest.fixture(scope="class")
+    def day(self):
+        return sc.chaos_day()  # the tuned 48-tick acceptance day
+
+    @pytest.fixture(scope="class")
+    def rep(self, runtime, field, day):
+        return sc.replay(day, runtime=runtime,
+                         controller=_ctl(runtime, field))
+
+    def test_fingerprint_pinned_and_never_over_limit(self, runtime, field,
+                                                     day, rep):
+        again = sc.replay(day, runtime=runtime,
+                          controller=_ctl(runtime, field))
+        assert again.fingerprint == rep.fingerprint
+        assert rep.t_max < TF.T_MAX_CHIP  # contained, faults and all
+
+    def test_every_containment_layer_actually_fired(self, rep):
+        assert rep.quarantined > 0        # bus validity/freshness
+        assert rep.stale_fallbacks > 0    # guard-banded last-good
+        assert rep.frozen_ticks > 0       # watchdog level 2 reached
+        assert rep.degraded_ticks > rep.frozen_ticks
+        assert rep.safe_states > 0        # NACK burst pinned chips
+        assert rep.write_nacks > 0 and rep.write_retries > 0
+        assert rep.below_axis_clamps > 0  # the load dip under u_min
+        assert rep.recover_ticks          # ladder climbed back down
+        assert rep.mean_ticks_to_recover > 0
+
+    def test_rate_zero_model_changes_nothing(self, runtime, field, day):
+        quiet = dataclasses.replace(day, chaos=None)
+        c = _ctl(runtime, field)
+        clean = sc.replay(quiet, runtime=runtime, controller=c)
+        zeroed = sc.replay(quiet, runtime=runtime, controller=c,
+                           faults=ctl.ControlFaultModel(rate=0.0))
+        assert zeroed.fingerprint == clean.fingerprint
+        assert zeroed.energy_j == clean.energy_j
+        assert zeroed.quarantined == 0 and zeroed.safe_states == 0
+        assert zeroed.frozen_ticks == 0 and not zeroed.watchdog_events

@@ -80,6 +80,39 @@ def test_sliding_window_ring_cache():
                                    err_msg=f"step {t}")
 
 
+def test_sliding_window_chunked_prefill_past_wrap():
+    """SWA ragged chunked prefill (§9 satellite): multi-token chunks
+    (S > 1) streamed through the ring cache must match the full forward
+    while crossing the window-wrap boundary — including a ragged chunk
+    whose padded tail must not clobber live ring entries."""
+    cfg = registry.get("mixtral-8x7b").reduced().replace(
+        dtype="float32", param_dtype="float32", sliding_window=8,
+        moe_capacity_factor=16.0)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 26
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    full, _ = model.apply(params, {"tokens": toks})
+    _, cache = model.prefill(params, {"tokens": toks[:, :4]}, max_len=S)
+    assert cache["stack"]["k"].shape[2] == 8  # ring shorter than sequence
+    t = 4
+    # (chunk_len, n_valid): the 2-valid chunk writes its padded third slot
+    # across the ring boundary; later chunks straddle the wrap themselves
+    for k, nv in [(3, 3), (3, 2), (4, 4), (4, 4), (4, 4), (4, 4), (1, 1)]:
+        chunk = toks[:, t:t + k]
+        if chunk.shape[1] < k:  # pad the scripted length at the tail
+            chunk = jnp.pad(chunk, ((0, 0), (0, k - chunk.shape[1])))
+        logits, cache = model.decode(
+            params, chunk, cache, t,
+            n_valid=None if nv == k else jnp.asarray([nv]))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, :nv]), np.asarray(full[:, t:t + nv]),
+            atol=2e-4, err_msg=f"chunk at {t} (+{nv})")
+        t += nv
+    assert t == S  # the schedule covered the whole sequence
+
+
 class TestMoE:
     def test_router_topk_weights_normalized(self):
         key = jax.random.PRNGKey(0)

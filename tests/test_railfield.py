@@ -119,6 +119,22 @@ class TestRailFieldTable:
             ctl.RailField([10.0, 20.0], [1.0], np.zeros((1, 1, 4)),
                           np.zeros((1, 1, 4)))
 
+    def test_below_axis_clamp_is_counted(self, field):
+        """A lookup under ``u_min`` answers the conservative clamped slice
+        but must leave an observable trace (ROADMAP item 3 / §9 ledger)."""
+        base = field.clamped_below
+        field.lookup(25.0, 0.5)                      # in range: no count
+        assert field.clamped_below == base
+        vc_lo, _ = field.lookup(25.0, 0.1)           # scalar below u_min
+        assert field.clamped_below == base + 1
+        us = np.full(field.chips, field.u_min)
+        us[3] = 0.05                                 # one chip dips under
+        field.lookup(25.0, us)
+        assert field.clamped_below == base + 2
+        vc_min, _ = field.lookup(25.0, field.u_min)  # exact edge: clean
+        assert field.clamped_below == base + 2
+        np.testing.assert_allclose(vc_lo, vc_min)    # clamped == u_min slice
+
     def test_nominal_fallback_below_the_axis(self, runtime, field):
         # sensed load below u_min must NOT be read against the clamped
         # u_min slice (that inflates the reported saving ~2.5x); the

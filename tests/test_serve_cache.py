@@ -45,6 +45,23 @@ class TestKVCacheManager:
         c = mgr.allocate(3)  # recycled, no new arrays
         assert c == a
 
+    def test_free_guards_double_free_and_bad_slot(self, dense):
+        """Regression (§9 satellite): a double free used to push the slot
+        onto the free list twice, handing the same slot to two requests."""
+        _, model, _ = dense
+        mgr = KVCacheManager(model, slots=2, max_len=32)
+        s = mgr.allocate(4)
+        mgr.free(s)
+        with pytest.raises(ValueError, match="double free"):
+            mgr.free(s)
+        with pytest.raises(ValueError, match="invalid slot"):
+            mgr.free(2)
+        with pytest.raises(ValueError, match="invalid slot"):
+            mgr.free(-1)
+        # the free list stayed sane: both slots allocate exactly once
+        assert sorted([mgr.allocate(1), mgr.allocate(1)]) == [0, 1]
+        assert mgr.free_slots == []
+
     def test_free_invalidates_pos_ids_row(self, dense):
         _, model, _ = dense
         mgr = KVCacheManager(model, slots=2, max_len=16)

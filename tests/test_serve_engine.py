@@ -134,6 +134,91 @@ class TestEdgeCases:
         assert samples == [] and eng.ticks == 0
 
 
+class TestPreemption:
+    """§9 thermal-emergency preemption: evict -> host page pool -> resume
+    bitwise-identical."""
+
+    def _refs(self, model, params, prompts, max_new=8):
+        refs = []
+        for i, p in enumerate(prompts):
+            e = _eng(model, params)
+            e.submit(Request(i, p, max_new=max_new))
+            refs.append(e.run()[0].out)
+        return refs
+
+    def test_preempt_resume_is_bitwise_identical(self, dense):
+        cfg, model, params = dense
+        prompts = [np.arange(5) % cfg.vocab_size,
+                   (np.arange(7) * 2 + 1) % cfg.vocab_size]
+        refs = self._refs(model, params, prompts)
+
+        eng = _eng(model, params)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new=8))
+        for _ in range(3):  # both mid-decode
+            eng.step()
+        assert eng.preempt_to(0) == 2  # full eviction to the page pool
+        assert len(eng.pool) == 2 and sorted(eng.mgr.free_slots) == [0, 1]
+        assert all(r is None for r in eng.slot_req)
+        done = {r.rid: r for r in eng.run()}
+        assert [done[i].out for i in range(2)] == refs
+        assert all(done[i].preempts == 1 for i in range(2))
+        assert eng.preempts == 2 and len(eng.pool) == 0
+
+    def test_low_priority_newest_evicted_first(self, dense):
+        cfg, model, params = dense
+        eng = _eng(model, params)
+        eng.submit(Request(0, np.arange(4) % cfg.vocab_size, max_new=8,
+                           priority=1))  # premium
+        eng.step()
+        eng.submit(Request(1, np.arange(6) % cfg.vocab_size, max_new=8))
+        eng.step()
+        assert eng.preempt_to(1) == 1
+        kept = [r for r in eng.slot_req if r is not None]
+        assert len(kept) == 1 and kept[0].rid == 0  # premium survives
+        assert eng.queue[0].rid == 1 and 1 in eng.pool
+
+    def test_preempt_mid_prefill_resumes_the_stream(self, dense):
+        cfg, model, params = dense
+        prompt = np.arange(11) % cfg.vocab_size
+        ref = self._refs(model, params, [prompt], max_new=6)[0]
+        eng = _eng(model, params, prefill_chunk=4)
+        eng.submit(Request(0, prompt, max_new=6))
+        eng.step()  # one 4-token chunk fed: mid-prefill
+        req = next(r for r in eng.slot_req if r is not None)
+        assert 0 < req.fed < len(prompt)
+        eng.preempt_to(0)
+        assert eng.run()[0].out == ref
+
+    def test_resume_across_expandable_growth(self, dense):
+        cfg, model, params = dense
+        prompt = np.arange(5) % cfg.vocab_size
+        solo = _eng(model, params, expandable=True)
+        solo.submit(Request(0, prompt, max_new=12))
+        ref = solo.run()[0].out
+
+        eng = _eng(model, params, expandable=True)
+        eng.submit(Request(0, prompt, max_new=12))
+        for _ in range(2):
+            eng.step()
+        eng.preempt_to(0)
+        # the cache regrows while the rows sit in the host pool: restore
+        # must pad the stashed rows out to the new leaf shapes
+        eng.submit(Request(1, (np.arange(9) * 3 + 2) % cfg.vocab_size,
+                           max_new=12))
+        done = {r.rid: r for r in eng.run()}
+        assert done[0].out == ref
+        assert done[0].preempts == 1
+
+    def test_preempt_to_is_a_noop_when_under_cap(self, dense):
+        cfg, model, params = dense
+        eng = _eng(model, params)
+        eng.submit(Request(0, np.arange(4) % cfg.vocab_size, max_new=4))
+        eng.step()
+        assert eng.preempt_to(2) == 0
+        assert eng.preempts == 0 and len(eng.pool) == 0
+
+
 class TestTelemetry:
     def test_every_step_emits_one_sample(self, dense):
         cfg, model, params = dense
