@@ -47,6 +47,28 @@ def run(quick: bool = False) -> Dict:
     out["flash_attention_interpret_us"] = _time(
         lambda a, b, c: flash_attention(a, b, c, interpret=True), q, k, v)
 
+    # paged-attention decode: block-table K/V gather through scalar
+    # prefetch (B slots, non-contiguous pages, one query token per slot)
+    Bp, Hp, Hkv, Dp = (4, 8, 2, 64)
+    ps, npages = (16, 4) if quick else (16, 16)
+    Pp = Bp * npages
+    qp = jax.random.normal(jax.random.fold_in(key, 20), (Bp, Hp, Dp))
+    kp = jax.random.normal(jax.random.fold_in(key, 21), (Pp + 1, ps, Hkv, Dp))
+    vp = jax.random.normal(jax.random.fold_in(key, 22), (Pp + 1, ps, Hkv, Dp))
+    posp = jnp.full((Bp,), npages * ps - 1, jnp.int32)
+    # page slot*npages + j carries logical positions [j*ps, (j+1)*ps); the
+    # trailing pool index Pp is the invalid null page (ids = -1)
+    idsp = (jnp.arange(ps, dtype=jnp.int32)[None]
+            + (jnp.arange(Pp + 1, dtype=jnp.int32)[:, None] % npages) * ps
+            ).at[Pp].set(-1)
+    btp = (jnp.arange(npages, dtype=jnp.int32)[None]
+           + jnp.arange(Bp, dtype=jnp.int32)[:, None] * npages)
+    out["paged_attention_ref_us"] = _time(
+        lambda *a: kref.paged_attention_ref(*a), qp, kp, vp, idsp, btp, posp)
+    out["paged_attention_interpret_us"] = _time(
+        lambda *a: ops.paged_attention_decode(*a), qp, kp, vp, idsp, btp,
+        posp)
+
     b, S2, H, P, N = 1, (128 if quick else 512), 8, 32, 64
     xh = jax.random.normal(jax.random.fold_in(key, 4), (b, S2, H, P)) * 0.5
     dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 5),
@@ -151,20 +173,69 @@ def closed_loop(quick: bool = True) -> Dict:
     out = {}
 
     # -- serving throughput under continuous batching ------------------------
+    # the headline number runs the PAGED path with speculative decode (the
+    # production configuration); the contiguous engine rides along as the
+    # decode-tax comparator.  Best-of-3 days: the tokens are deterministic,
+    # only the wall clock varies.
     cfg = registry.get("llama3.2-1b").reduced()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, params, batch_slots=4, max_len=64)
     n_req = 6 if quick else 16
-    for rid in range(n_req):
-        eng.submit(Request(rid, np.arange(4 + rid % 3) % cfg.vocab_size,
-                           max_new=8))
-    eng.step()  # pay prefill/decode compile outside the timed region
-    t0 = time.time()
-    eng.run()
-    dt = time.time() - t0
-    toks = sum(len(r.out) for r in eng.finished)
-    out["serve_tokens_per_s"] = toks / dt
+
+    def _serve_day(eng):
+        best = 0.0
+        for _ in range(3):
+            for rid in range(n_req):
+                eng.submit(Request(rid, np.arange(4 + rid % 3)
+                                   % cfg.vocab_size, max_new=8))
+            eng.step()  # prefill/decode compiles land on day one only
+            t0 = time.time()
+            eng.run()
+            toks = sum(len(r.out) for r in eng.finished)
+            eng.finished.clear()
+            best = max(best, toks / (time.time() - t0))
+        return best
+
+    eng = Engine(model, params, batch_slots=4, max_len=64, paged=True,
+                 speculate=3)
+    out["serve_tokens_per_s"] = _serve_day(eng)
+    out["spec_decode_accept_rate"] = eng.spec_accept_rate
+    assert out["spec_decode_accept_rate"] > 0.0
+    eng_c = Engine(model, params, batch_slots=4, max_len=64)
+    out["serve_tokens_per_s_contiguous"] = _serve_day(eng_c)
+
+    # paged decode tax: one fused decode tick, block-table gather/scatter
+    # vs the contiguous cache, interleaved best-of-reps so machine drift
+    # hits both paths equally.  The 1.2x bound is the PR's acceptance gate.
+    def _steady(paged):
+        e = Engine(model, params, batch_slots=4, max_len=64, paged=paged)
+        for rid in range(4):
+            e.submit(Request(rid, np.arange(6) % cfg.vocab_size,
+                             max_new=60))
+        for _ in range(4):
+            e.step()  # feed prompts; all slots now mid-decode
+        plan, _ = e._compose()
+        key = jax.random.PRNGKey(0)
+        e._run_fused(e._fused, plan, key)
+        return e, plan, key
+
+    pair = {False: _steady(False), True: _steady(True)}
+    best = {False: float("inf"), True: float("inf")}
+    iters = 20
+    for _ in range(9):
+        for paged, (e, plan, key) in pair.items():
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                e._run_fused(e._fused, plan, key)
+            best[paged] = min(best[paged],
+                              (time.perf_counter() - t0) / iters)
+    out["contig_decode_us"] = best[False] * 1e6
+    out["paged_decode_us"] = best[True] * 1e6
+    tax = out["paged_decode_us"] / out["contig_decode_us"]
+    assert tax <= 1.2, (
+        f"paged decode tax {tax:.3f}x exceeds the 1.2x budget "
+        f"({out['paged_decode_us']:.0f}us vs "
+        f"{out['contig_decode_us']:.0f}us)")
 
     # -- control-plane latencies --------------------------------------------
     from repro.control.lut import sweep_points
@@ -265,10 +336,11 @@ def closed_loop(quick: bool = True) -> Dict:
     out["serve_tokens_per_joule"] = rep.tokens_per_joule
 
     # -- fault containment (DESIGN.md §9) ------------------------------------
-    # thermal-emergency preemption latency: one Preempt actuation = gather
-    # the victims' KV rows, device->host into the page pool, free the
-    # slots, requeue (the resume tick afterwards is untimed)
-    eng2 = Engine(model, params, batch_slots=4, max_len=64)
+    # thermal-emergency preemption latency on the PAGED path: one Preempt
+    # actuation = gather the victim's allocated block-table pages (page-
+    # exact, not the slot's full span), device->host into the page pool,
+    # free the pages, requeue (the resume tick afterwards is untimed)
+    eng2 = Engine(model, params, batch_slots=4, max_len=64, paged=True)
     for rid in range(10):
         eng2.submit(Request(rid, np.arange(6) % cfg.vocab_size, max_new=48))
     eng2.step()  # fill slots, pay prefill/decode + gather compiles
@@ -295,6 +367,11 @@ def closed_loop(quick: bool = True) -> Dict:
 
 REGRESSION_FACTOR = 2.0  # --check fails past this ratio (CI machine slack)
 
+# throughput/rate entries gate in the OPPOSITE direction: current must not
+# fall below baseline / REGRESSION_FACTOR (the serving acceptance floor —
+# e.g. a paged-path tokens/s collapse or a dead speculative accept rate)
+LOWER_BOUND_KEYS = ("serve_tokens_per_s", "spec_decode_accept_rate")
+
 
 def _gated(k: str) -> bool:
     """jnp-path ``*_us`` entries plus the warm RailField build are gated;
@@ -303,6 +380,8 @@ def _gated(k: str) -> bool:
         return True
     if k == "mean_ticks_to_recover":  # deterministic chaos-day replay:
         return True                   # a drift here is a logic change
+    if k in LOWER_BOUND_KEYS:
+        return True
     return k.endswith("_us") and "interpret" not in k
 
 
@@ -315,7 +394,10 @@ def check_regressions(baseline: Dict, current: Dict,
     closed-loop benchmark are load-dependent; the stable regression signal
     is the jnp-reference kernel + solver timings, plus the warm RailField
     build and fast-path lookup (``railfield_build_ms`` /
-    ``railfield_lookup_us``). Returns offending
+    ``railfield_lookup_us``).  ``LOWER_BOUND_KEYS`` (paged-path serving
+    throughput, speculative accept rate) gate downward instead: they fail
+    when the current value drops below ``baseline / factor``. Returns
+    offending
     ``(key, baseline, current)`` rows and the baseline keys absent from
     the current results (a missing key would otherwise silently disable
     its gate — the caller must treat it as a failure)."""
@@ -325,6 +407,9 @@ def check_regressions(baseline: Dict, current: Dict,
             continue
         if k not in current:
             missing.append(k)
+        elif k in LOWER_BOUND_KEYS:
+            if current[k] < baseline[k] / factor:
+                bad.append((k, baseline[k], current[k]))
         elif current[k] > baseline[k] * factor:
             bad.append((k, baseline[k], current[k]))
     return bad, missing

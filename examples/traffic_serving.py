@@ -21,7 +21,13 @@ deterministic request workload under the full control loop):
   pinned), finish inside the same SLO, and the replay fingerprints are
   deterministic; the thermal-aware day simply spends fewer joules.
 
-    PYTHONPATH=src python examples/traffic_serving.py [--quick]
+``--paged`` re-runs the whole comparison through the paged KV cache
+(block-table indirection, free-list page allocator) and asserts the replay
+fingerprints are bitwise identical to the contiguous path — paging is a
+memory-layout change, not a numerics change — before checking the same
+tokens/joule win on the paged engine.
+
+    PYTHONPATH=src python examples/traffic_serving.py [--quick] [--paged]
 """
 import argparse
 import time
@@ -39,6 +45,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="short day + small burst (the CI smoke shape)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV cache and pin its "
+                         "fingerprints bitwise against the contiguous runs")
     args = ap.parse_args(argv)
 
     cfg = registry.get("llama3.2-1b").reduced()
@@ -54,12 +63,13 @@ def main(argv=None):
     print(f"[day] {day.description}  [workload] {wl.name} "
           f"({len(wl.arrivals)} requests, fp={wl.fingerprint})")
 
+    engine_kwargs = {"paged": True} if args.paged else {}
     runs = {}
     for tag, admission in (("throughput-only", False),
                            ("thermal-aware", True)):
         t0 = time.time()
         runs[tag] = sc.serve_replay(day, wl, model, params,
-                                    admission=admission)
+                                    admission=admission, **engine_kwargs)
         r = runs[tag]
         print(f"[{tag:16s}] tokens={r.tokens:3d} energy={r.energy_j:12.0f} J"
               f"  tokens/MJ={r.tokens_per_joule * 1e6:7.1f}"
@@ -71,6 +81,17 @@ def main(argv=None):
     assert thru.outputs == therm.outputs, "admission changed the tokens"
     assert therm.max_wait <= SLO_ENGINE_TICKS >= thru.max_wait, "SLO miss"
     assert thru.finished == therm.finished == len(wl.arrivals)
+    if args.paged:
+        # block-table indirection is a memory-layout change, not a
+        # numerics change: the paged day must replay the contiguous day
+        # bit for bit (tokens, admission caps, energy integral)
+        for tag, admission in (("throughput-only", False),
+                               ("thermal-aware", True)):
+            contig = sc.serve_replay(day, wl, model, params,
+                                     admission=admission)
+            assert runs[tag].fingerprint == contig.fingerprint, \
+                f"paged {tag} diverged from the contiguous path"
+        print(f"[paged] both fingerprints bitwise == contiguous path")
     win = therm.tokens_per_joule / thru.tokens_per_joule
     print(f"[win] thermal-aware serves the same tokens at {win:.2f}x "
           f"tokens/joule (deferring {therm.deferred} admissions out of the "

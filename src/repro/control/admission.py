@@ -131,9 +131,16 @@ class AdmissionController:
 
     def _budget(self, snap: Snapshot) -> int:
         """Admission budget k*: price each marginal admission against the
-        cheapest ambient the field knows; SLO pressure admits everything."""
+        cheapest ambient the field knows; SLO pressure admits everything.
+
+        The slot bound is additionally clipped to the engine's *actual*
+        free KV pages (``pages_free``; -1 = page telemetry absent): with
+        the paged allocator any free page serves any slot, so the page
+        count IS the admission capacity — no fragmentation haircut."""
         slots = snap.slots
         want = min(snap.queued, max(slots - snap.active, 0))
+        if snap.pages_free >= 0:
+            want = min(want, snap.pages_free)
         if want <= 0:
             return 0
         if snap.oldest_wait >= self.max_wait:

@@ -76,6 +76,9 @@ class TickSample:
     slots: int = 0
     admitted: int = 0      # requests admitted this tick
     oldest_wait: float = 0.0  # ticks the oldest queued request has waited
+    # actual free KV pages (paged allocator free list); -1 = producer
+    # predates page telemetry, admission pricing ignores the bound
+    pages_free: int = -1
 
 
 @dataclass(frozen=True)
@@ -153,6 +156,7 @@ class Snapshot:
     slots: int = 0
     admitted: int = 0           # admissions since previous snapshot
     oldest_wait: float = 0.0    # queue-head age [ticks] at latest sample
+    pages_free: int = -1        # free KV pages at latest sample (-1 unknown)
     shares: Optional[np.ndarray] = None  # elastic per-chip work shares
     stragglers: List[StragglerSample] = field(default_factory=list)
     dead: FrozenSet[str] = frozenset()
@@ -285,6 +289,8 @@ class TelemetryBus:
                     s.tick_s = smp.tick_s
                     if smp.slots:
                         s.slots = smp.slots
+                    if smp.pages_free >= 0:
+                        s.pages_free = smp.pages_free
                 elif isinstance(smp, UtilSample):
                     s.shares = np.asarray(smp.shares, np.float32)
                 elif isinstance(smp, StragglerSample):
@@ -306,7 +312,7 @@ class TelemetryBus:
                         step_s=s.step_s, queued=s.queued, active=s.active,
                         tokens=s.tokens, tick_s=s.tick_s, slots=s.slots,
                         admitted=s.admitted, oldest_wait=s.oldest_wait,
-                        shares=s.shares,
+                        pages_free=s.pages_free, shares=s.shares,
                         stragglers=list(s.stragglers), dead=s.dead,
                         t_amb_age=s.t_amb_age, t_chip_age=s.t_chip_age,
                         quarantined=s.quarantined, safe_state=s.safe_state,

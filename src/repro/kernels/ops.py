@@ -17,6 +17,7 @@ from repro.kernels.overscale_matmul import (bit_probs_to_cdf,
                                             make_int8_error_matmul,
                                             overscale_matmul as _omm,
                                             quantize)
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.thermal_stencil import thermal_stencil as _stencil
 
 INTERPRET = None  # None = auto (compiled on TPU, interpreter elsewhere)
@@ -34,6 +35,14 @@ def flash_attention_bh(q, k, v, *, causal=True, bq=128, bk=128):
                       interpret=_interpret())
 
     return jax.vmap(jax.vmap(one, in_axes=(1, 1, 1), out_axes=1))(q, k, v)
+
+
+def paged_attention_decode(q, k_pool, v_pool, ids_pool, block_table, pos, *,
+                           window=0):
+    """Paged single-token decode: q:(B,H,D), pools:(P,ps,Hkv,D)/(P,ps),
+    block_table:(B,n_pages) physical page ids, pos:(B,) query positions."""
+    return _paged(q, k_pool, v_pool, ids_pool, block_table, pos,
+                  window=window, interpret=_interpret())
 
 
 def mamba_scan_b(xh, dt, A, B, C, *, chunk=256):

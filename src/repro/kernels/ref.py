@@ -6,6 +6,8 @@ One reference per kernel, written with plain jnp ops (no pallas):
   corrupted product (the ABFT syndromes' left-hand side)
 - thermal_stencil_ref: K Jacobi sweeps of the 5-point thermal stencil
 - flash_attention_ref: naive softmax(QK^T)V with causal mask
+- paged_attention_ref: gather K/V pools through the block table, then the
+  serving tier's masked dense decode math (attention._sdpa)
 - mamba_scan_ref: delegates to the model-level chunked SSD implementation
 """
 from __future__ import annotations
@@ -75,6 +77,31 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
         s = jnp.where(mask, s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     return (w @ v.astype(jnp.float32)).astype(v.dtype)
+
+
+def paged_attention_ref(q, k_pool, v_pool, ids_pool, block_table, pos, *,
+                        window: int = 0):
+    """Oracle for kernels/paged_attention: materialize each slot's logical
+    cache by gathering its block-table pages, then run the serving tier's
+    masked dense decode (attention._sdpa) — so with page_size == max_len
+    and an identity block table this IS the fused contiguous decode path,
+    bitwise.  q:(B,H,D), pools:(P,ps,...), block_table:(B,n), pos:(B,)."""
+    from repro.models.attention import _sdpa
+    B, n = block_table.shape
+    ps = k_pool.shape[1]
+    k = k_pool[block_table].reshape(B, n * ps, *k_pool.shape[2:])
+    v = v_pool[block_table].reshape(B, n * ps, *v_pool.shape[2:])
+    ids = ids_pool[block_table].reshape(B, n * ps)
+    valid = (ids >= 0) & (ids <= pos[:, None])
+    if window:
+        valid &= ids > pos[:, None] - window
+    mask = valid[:, None, None, None, :]  # (B,1,1,S=1,T)
+    out = _sdpa(q[:, None], k, v, mask, None)[:, 0]
+    # a fully-disabled row (pos = -1: every page masked) is exactly zero,
+    # matching the kernel's l == 0 finalize — not _sdpa's uniform-softmax
+    # mean(v) over an all-NEG_INF row
+    any_valid = jnp.any(valid, axis=-1)
+    return jnp.where(any_valid[:, None, None], out, 0.0).astype(out.dtype)
 
 
 def mamba_scan_ref(xh, dt, A, B, C, chunk: int):

@@ -331,6 +331,22 @@ def poisson_burst(burst_at: int = 1, burst_n: int = 8,
                            tuple(arrivals))
 
 
+def churn_requests(waves: int = 4, per_wave: int = 4, gap: int = 2,
+                   prompt_len: int = 5, max_new: int = 5) -> RequestWorkload:
+    """The paged-attention acceptance workload: short-lived requests landing
+    in overlapping waves, so slots free and refill continuously and the KV
+    footprint is many *partial* sequences at once.  A contiguous cache must
+    reserve ``max_len`` per slot up front, so its admission capacity is
+    ``pages / pages_per_slot``; the paged allocator hands the same page
+    budget out one page at a time and admits strictly more concurrently
+    (the vLLM fragmentation argument, pinned by tests/test_serve_paged)."""
+    arrivals = [RequestArrival(1 + w * gap, w * per_wave + i,
+                               prompt_len, max_new)
+                for w in range(waves) for i in range(per_wave)]
+    return RequestWorkload(f"churn[{waves}x{per_wave},gap={gap}]",
+                           tuple(arrivals))
+
+
 # ---------------------------------------------------------------------------
 # replay harness
 # ---------------------------------------------------------------------------

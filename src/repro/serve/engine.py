@@ -10,9 +10,25 @@ no admission barrier — each slot runs at its own ``pos`` (the ragged
 ``pos``/``n_valid`` contract of ``Model.decode``), so a request admitted
 while others are mid-decode produces outputs identical to running alone.
 
-Cache state lives in :class:`~repro.serve.cache.KVCacheManager`: per-slot
-positions, page accounting, slot recycling (freed rows are invalidated via
-``pos_ids = -1`` and reused without growing the arrays).
+Cache state lives in :class:`~repro.serve.cache.KVCacheManager` (or, with
+``paged=True``, :class:`~repro.serve.cache.PagedKVCacheManager` — free-list
+pages behind per-slot block tables): per-slot positions, page accounting,
+slot recycling (freed rows/pages are invalidated via ``pos_ids = -1`` and
+reused without growing the arrays).  On the paged path the fused step
+gathers a slot-contiguous logical cache through the block tables, runs the
+unchanged ``Model.decode``, and scatters pages back — one jit, outputs
+bitwise identical to the contiguous manager — and admission/extension run
+at page granularity off the actual free list, so churn that would fragment
+contiguous rows costs nothing.
+
+``speculate=k`` adds draft-k self-speculative decode (greedy only):
+n-gram prompt-lookup drafts ride the same ragged ``pos``/``n_valid``
+contract as an ``S = k+1`` extend, one fused verify step scores every draft
+row, and the accepted prefix (+ the bonus token) is bitwise what sequential
+greedy would have produced; the rejected tail's pages roll back through
+the allocator (``trim``).  Stale rejected entries are self-healing: their
+``pos_ids`` exceed every later query position until the sequential path
+overwrites them (chunk K/V is written before attention).
 
 Two scheduling paths, picked by model family:
 
@@ -33,7 +49,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,8 +58,9 @@ import numpy as np
 from repro.control.telemetry import TickSample
 from repro.models.model import Model
 from repro.serve import scheduler as sched
-from repro.serve.cache import (ExpandableKVCacheManager, HostPagePool,
-                               KVCacheManager)
+from repro.serve.cache import (ExpandableKVCacheManager,
+                               ExpandablePagedKVCacheManager, HostPagePool,
+                               KVCacheManager, PagedKVCacheManager)
 from repro.serve.step import sample
 
 
@@ -69,6 +86,8 @@ class Engine:
                  admit_cap: Optional[int] = None,
                  top_k: int = 0, prefill_chunk: int = 16,
                  page_size: int = 16, expandable: bool = False,
+                 paged: bool = False, total_pages: Optional[int] = None,
+                 speculate: int = 0,
                  seed: int = 0, warmup: bool = True):
         self.model = model
         self.params = params
@@ -87,42 +106,144 @@ class Engine:
         self._ragged = (cfg.family in ("dense", "moe")
                         and (not cfg.sliding_window
                              or self.prefill_chunk <= cfg.sliding_window))
-        mgr_cls = ExpandableKVCacheManager if expandable else KVCacheManager
-        self.mgr = mgr_cls(model, batch_slots, max_len, page_size=page_size)
+        self._paged = bool(paged)
+        if self._paged and not self._ragged:
+            raise ValueError(
+                "paged=True requires the ragged path (dense/moe attention); "
+                "recurrent state cannot be gathered through block tables")
+        self._spec_k = max(int(speculate), 0)
+        if self._spec_k:
+            if temperature != 0.0:
+                raise ValueError("speculate requires greedy decoding "
+                                 "(temperature=0): verification compares "
+                                 "drafts against the argmax rows")
+            if not self._ragged:
+                raise ValueError("speculate requires the ragged path")
+            if cfg.sliding_window and cfg.sliding_window < max_len:
+                raise ValueError(
+                    "speculate requires sliding_window >= max_len: a "
+                    "wrapping ring scatter would destroy live window "
+                    "entries a rejected draft cannot restore")
+        if self._paged:
+            mgr_cls = (ExpandablePagedKVCacheManager if expandable
+                       else PagedKVCacheManager)
+            self.mgr = mgr_cls(model, batch_slots, max_len,
+                               page_size=page_size, total_pages=total_pages)
+        else:
+            mgr_cls = (ExpandableKVCacheManager if expandable
+                       else KVCacheManager)
+            self.mgr = mgr_cls(model, batch_slots, max_len,
+                               page_size=page_size)
         self.slot_req: List[Optional[Request]] = [None] * self.B
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.pool = HostPagePool()  # preempted KV rows, host side
         self.preempts = 0
+        self.spec_proposed = 0  # draft tokens offered to verification
+        self.spec_accepted = 0  # draft tokens accepted (bitwise == greedy)
+        self._bt_host: Optional[np.ndarray] = None  # device bt cache key
+        self._bt_dev = None
         self.key = jax.random.PRNGKey(seed)
         # control plane: admission throttle + tick telemetry subscribers
         self.admit_cap = admit_cap
         self.on_tick: List[Callable[[TickSample], None]] = []
         self.ticks = 0
 
-        def fused(params, cache, tokens, pos, n_valid, key):
-            logits, cache = model.decode(params, tokens, cache, pos,
-                                         n_valid=n_valid)
-            idx = jnp.clip(n_valid - 1, 0, tokens.shape[1] - 1)
-            last = jnp.take_along_axis(
-                logits, idx[:, None, None], axis=1)[:, 0]  # (B,V)
-            return sample(last, key, self.temperature, self.top_k), cache
+        if self._paged:
+            mgr = self.mgr
 
-        self._fused = jax.jit(fused)
+            def fused(params, pool, bt, inv, tokens, pos, n_valid, key):
+                cache = mgr.gather_logical(pool, bt)
+                logits, cache = model.decode(params, tokens, cache, pos,
+                                             n_valid=n_valid)
+                idx = jnp.clip(n_valid - 1, 0, tokens.shape[1] - 1)
+                last = jnp.take_along_axis(
+                    logits, idx[:, None, None], axis=1)[:, 0]  # (B,V)
+                nxt = sample(last, key, self.temperature, self.top_k)
+                return nxt, mgr.scatter_all(pool, cache, inv)
+
+            def fused_spec(params, pool, bt, inv, tokens, pos, n_valid, key):
+                cache = mgr.gather_logical(pool, bt)
+                logits, cache = model.decode(params, tokens, cache, pos,
+                                             n_valid=n_valid)
+                rows = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return rows, mgr.scatter_all(pool, cache, inv)
+        else:
+            def fused(params, cache, tokens, pos, n_valid, key):
+                logits, cache = model.decode(params, tokens, cache, pos,
+                                             n_valid=n_valid)
+                idx = jnp.clip(n_valid - 1, 0, tokens.shape[1] - 1)
+                last = jnp.take_along_axis(
+                    logits, idx[:, None, None], axis=1)[:, 0]  # (B,V)
+                return sample(last, key, self.temperature, self.top_k), cache
+
+            def fused_spec(params, cache, tokens, pos, n_valid, key):
+                logits, cache = model.decode(params, tokens, cache, pos,
+                                             n_valid=n_valid)
+                # every row's greedy continuation — the verify step
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        # the paged step donates the pool: the scatter then updates the
+        # page buffers in place instead of copying the whole pool per
+        # layer (the block-table indirection's write path is what keeps
+        # the paged tick within the decode-latency tax budget)
+        donate = (1,) if self._paged else ()
+        self._fused = jax.jit(fused, donate_argnums=donate)
+        self._fused_spec = jax.jit(fused_spec, donate_argnums=donate)
         if warmup:
             self._warmup()
 
+    def _run_fused(self, fn, plan: sched.TickPlan, key) -> np.ndarray:
+        """One fused device step over the plan (gather -> decode -> scatter
+        on the paged path); returns the host copy of the sampled output."""
+        toks = jnp.asarray(plan.tokens)
+        pos = jnp.asarray(plan.pos)
+        nv = jnp.asarray(plan.n_valid)
+        if self._paged:
+            bt, inv = self._bt_device()
+            out, self.mgr.pool = fn(self.params, self.mgr.pool, bt, inv,
+                                    toks, pos, nv, key)
+        else:
+            out, self.mgr.cache = fn(self.params, self.mgr.cache,
+                                     toks, pos, nv, key)
+        return np.asarray(out)  # the tick's single host sync
+
+    def _bt_device(self):
+        """Device copies of the block table and its inverse page map,
+        re-uploaded only when the host table actually changed (steady
+        decode re-uses pages for page_size ticks at a time, so most ticks
+        skip the transfer)."""
+        if self._bt_host is None or not np.array_equal(
+                self._bt_host, self.mgr.block_table):
+            self._bt_host = self.mgr.block_table.copy()
+            self._bt_dev = (jnp.asarray(self._bt_host, jnp.int32),
+                            jnp.asarray(self.mgr.inverse_map(), jnp.int32))
+        return self._bt_dev
+
     def _warmup(self):
-        """Pre-compile the fused step's two width buckets and the slot
-        invalidation so no compile lands mid-traffic (n_valid = 0 rows make
-        the warmup calls no-ops on cache contents)."""
+        """Pre-compile the fused step's width buckets and the invalidation
+        paths so no compile lands mid-traffic (n_valid = 0 rows make the
+        warmup calls no-ops on cache contents)."""
         widths = {1, self.prefill_chunk} if self._ragged else {1}
         zero = jnp.zeros((self.B,), jnp.int32)
-        for S in sorted(widths):
-            self._fused(self.params, self.mgr.cache,
-                        jnp.zeros((self.B, S), jnp.int32), zero, zero,
-                        self.key)
-        self.mgr._invalidate(self.mgr.cache, jnp.asarray([0]))
+        calls = [(self._fused, S) for S in sorted(widths)]
+        if self._spec_k:
+            calls.append((self._fused_spec, self._spec_k + 1))
+        for fn, S in calls:
+            toks = jnp.zeros((self.B, S), jnp.int32)
+            if self._paged:
+                # the pool is donated into the jit — rebind the returned
+                # buffer or the manager would hold a deleted array
+                bt, inv = self._bt_device()
+                _, self.mgr.pool = fn(self.params, self.mgr.pool, bt, inv,
+                                      toks, zero, zero, self.key)
+            else:
+                fn(self.params, self.mgr.cache, toks, zero, zero, self.key)
+        if self._paged:
+            self.mgr._invalidate_pages(
+                self.mgr.pool, jnp.asarray([self.mgr.null_page]))
+        else:
+            self.mgr._invalidate(self.mgr.cache, jnp.asarray([0]))
 
     # -- public API -----------------------------------------------------------
     @property
@@ -135,17 +256,28 @@ class Engine:
 
     # -- admission ------------------------------------------------------------
     def _admit(self) -> int:
-        """Admit queued requests into free slots (<= admit_cap per step)."""
+        """Admit queued requests into free slots (<= admit_cap per step).
+        On the paged path admission is additionally priced off the *actual*
+        free page list: a fresh request needs one page now, a resume needs
+        exactly the pages it parked — fragmentation-free by construction,
+        so "has pages" always means "can admit"."""
         cap = self.B if self.admit_cap is None else max(self.admit_cap, 0)
         admitted = 0
         while self.queue and self.mgr.free_slots and admitted < cap:
+            if self._paged:
+                head = self.queue[0]
+                need = (self.pool.put_pages(head.rid)
+                        if head.rid in self.pool else 1)
+                if self.mgr.free_pages < max(need, 1):
+                    break  # no pages — keep FIFO order, retry next tick
             req = self.queue.pop(0)
             if req.rid in self.pool:
                 # resume a preempted request: its KV rows come back from
                 # the host page pool bit for bit — no recompute, no drift
                 slot = self.mgr.allocate(len(req.prompt))
                 rows, pos = self.pool.take(req.rid)
-                if isinstance(self.mgr, ExpandableKVCacheManager):
+                if isinstance(self.mgr, (ExpandableKVCacheManager,
+                                         ExpandablePagedKVCacheManager)):
                     self.mgr.ensure(pos + 1)
                 self.mgr.restore(slot, rows, pos)
                 self.slot_req[slot] = req
@@ -183,8 +315,13 @@ class Engine:
                                                  -sr[0]))[:n_evict]
         requeue = []
         for slot, req in sorted(victims, key=lambda sr: sr[1].submit_tick):
+            # page-exact eviction: ship and account exactly the pages the
+            # request holds (the paged read gathers only its block-table
+            # entries; a short request never pays its slot's full span)
+            pages = self.mgr.slot_pages(slot)
             rows = self.mgr.read_rows([slot])
-            self.pool.put(req.rid, rows, int(self.mgr.pos[slot]))
+            self.pool.put(req.rid, rows, int(self.mgr.pos[slot]),
+                          pages=pages)
             self.slot_req[slot] = None
             self.mgr.free(slot)
             req.preempts += 1
@@ -210,35 +347,100 @@ class Engine:
         tok = int(sample(logits[:, -1], sk, self.temperature, self.top_k)[0])
         self._append(req, slot, tok)
 
+    # -- speculative drafting -------------------------------------------------
+    def _draft(self, req: Request, k: int) -> np.ndarray:
+        """n-gram prompt-lookup self-speculation (model-free, greedy): find
+        the most recent earlier occurrence of the last generated token in
+        the request's own prompt+output context and propose the tokens that
+        followed it.  Returns up to ``k`` draft tokens (possibly none)."""
+        ctx = np.concatenate([np.asarray(req.prompt, np.int32),
+                              np.asarray(req.out, np.int32)])
+        hits = np.nonzero(ctx[:-1] == ctx[-1])[0]
+        if hits.size == 0:
+            return np.zeros(0, np.int32)
+        j = int(hits[-1])
+        return ctx[j + 1:j + 1 + k].astype(np.int32)
+
     # -- the fused tick -------------------------------------------------------
-    def _compose(self) -> Optional[sched.TickPlan]:
+    def _compose(self) -> Tuple[Optional[sched.TickPlan], bool]:
+        """Compose the tick's work; second return marks a speculative
+        (all-decode, width ``k+1``) verify tick.  Speculation stands down
+        whenever any slot prefills or sits too close to ``max_len`` for the
+        fixed verify width (``_row_update`` would clamp the write)."""
+        k = self._spec_k
+        active = [(s, r) for s, r in enumerate(self.slot_req)
+                  if r is not None]
+        spec = bool(k) and bool(active) and all(
+            r.fed >= len(r.prompt)
+            and int(self.mgr.pos[s]) + k + 1 <= self.max_len
+            for s, r in active)
         work: List[sched.SlotWork] = []
-        for s, req in enumerate(self.slot_req):
-            if req is None:
-                continue
+        for s, req in active:
             P = len(req.prompt)
             if req.fed < P:  # ragged path only: stream the prompt
-                k = min(self.prefill_chunk, P - req.fed)
+                n = min(self.prefill_chunk, P - req.fed)
                 work.append(sched.SlotWork(
                     s, "prefill",
-                    np.asarray(req.prompt[req.fed:req.fed + k], np.int32),
-                    completes=(req.fed + k == P)))
+                    np.asarray(req.prompt[req.fed:req.fed + n], np.int32),
+                    completes=(req.fed + n == P)))
+            elif spec:
+                drafts = self._draft(req, k)
+                toks = np.zeros(k + 1, np.int32)  # fixed width: one bucket
+                toks[0] = req.out[-1]
+                toks[1:1 + len(drafts)] = drafts
+                work.append(sched.SlotWork(
+                    s, "decode", toks, n_valid=1 + len(drafts)))
             else:
                 work.append(sched.SlotWork(
                     s, "decode", np.asarray([req.out[-1]], np.int32)))
-        return sched.compose(work, self.mgr.pos, self.B, self.prefill_chunk)
+        plan = sched.compose(work, self.mgr.pos, self.B, self.prefill_chunk)
+        return plan, spec
+
+    def _reserve_pages(self, plan: sched.TickPlan) -> bool:
+        """Claim the pages this tick's real tokens will write (padded tails
+        land on the inert null page).  All-or-nothing: False when the free
+        list cannot cover the whole plan, so the caller can shed load and
+        recompose instead of extending half the slots."""
+        need = sum(
+            self.mgr.pages_needed(
+                w.slot, int(self.mgr.pos[w.slot]) + int(plan.n_valid[w.slot]))
+            for w in plan.work)
+        if need > self.mgr.free_pages:
+            return False
+        for w in plan.work:
+            self.mgr.extend(
+                w.slot, int(self.mgr.pos[w.slot]) + int(plan.n_valid[w.slot]))
+        return True
 
     def _tick(self) -> int:
-        plan = self._compose()
+        plan, spec = self._compose()
         if plan is None:
             return 0
-        if isinstance(self.mgr, ExpandableKVCacheManager):
+        if self._paged:
+            if isinstance(self.mgr, ExpandablePagedKVCacheManager):
+                self.mgr.ensure(int(plan.pos.max() + plan.width))
+            while not self._reserve_pages(plan):
+                # out of pages mid-decode: thermal-preempt the newest
+                # low-priority request (pages return to the free list,
+                # bitwise resume later) and recompose the tick
+                n_active = sum(r is not None for r in self.slot_req)
+                if n_active <= 1:
+                    raise RuntimeError(
+                        "page pool exhausted: one request needs more pages "
+                        f"than total_pages={self.mgr.total_pages}")
+                self.preempt_to(n_active - 1)
+                plan, spec = self._compose()
+                if plan is None:
+                    return 0
+                if isinstance(self.mgr, ExpandablePagedKVCacheManager):
+                    self.mgr.ensure(int(plan.pos.max() + plan.width))
+        elif isinstance(self.mgr, ExpandableKVCacheManager):
             self.mgr.ensure(int(plan.pos.max() + plan.width))
         self.key, sk = jax.random.split(self.key)
-        nxt, self.mgr.cache = self._fused(
-            self.params, self.mgr.cache, jnp.asarray(plan.tokens),
-            jnp.asarray(plan.pos), jnp.asarray(plan.n_valid), sk)
-        nxt = np.asarray(nxt)  # the tick's single host sync
+        if spec:
+            rows = self._run_fused(self._fused_spec, plan, sk)  # (B, k+1)
+            return self._commit_spec(plan, rows)
+        nxt = self._run_fused(self._fused, plan, sk)
         gen = 0
         self.mgr.advance([w.slot for w in plan.work],
                          [len(w.tokens) for w in plan.work])
@@ -253,6 +455,45 @@ class Engine:
                 self._append(req, w.slot, int(nxt[w.slot]))
                 gen += 1
         return gen
+
+    def _commit_spec(self, plan: sched.TickPlan, rows: np.ndarray) -> int:
+        """Verify draft rows against the greedy argmax and commit the
+        accepted prefix plus the bonus token, one token at a time (the
+        sequential EOS / max_new / max_len checks apply mid-prefix exactly
+        as they would tick by tick); roll the rejected tail's pages back
+        through the allocator."""
+        gen = 0
+        for w in plan.work:
+            req = self.slot_req[w.slot]
+            nv = int(plan.n_valid[w.slot])
+            drafts = w.tokens[1:nv]
+            a = 0
+            while a < len(drafts) and int(drafts[a]) == int(rows[w.slot, a]):
+                a += 1
+            self.spec_proposed += len(drafts)
+            self.spec_accepted += a
+            for i in range(a + 1):  # accepted drafts + the bonus token
+                self.mgr.advance([w.slot], [1])
+                self._append(req, w.slot, int(rows[w.slot, i]))
+                gen += 1
+                if req.done:
+                    break
+            if self._paged and not req.done:
+                # rejected tail: return its pages, keeping the span the
+                # next verify tick must reserve anyway (the hysteresis
+                # avoids a free/invalidate/realloc round trip per tick);
+                # stale entries in kept pages self-heal (pos_ids > every
+                # later query position until sequentially overwritten)
+                self.mgr.trim(w.slot, min(
+                    int(self.mgr.pos[w.slot]) + self._spec_k + 1,
+                    self.max_len))
+        return gen
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Fraction of proposed draft tokens verification accepted."""
+        return (self.spec_accepted / self.spec_proposed
+                if self.spec_proposed else 0.0)
 
     def _append(self, req: Request, slot: int, tok: int):
         req.out.append(tok)
@@ -284,7 +525,8 @@ class Engine:
                 active=sum(r is not None for r in self.slot_req),
                 finished=len(self.finished), tokens=gen,
                 tick_s=time.perf_counter() - t0, slots=self.B,
-                admitted=admitted, oldest_wait=oldest)
+                admitted=admitted, oldest_wait=oldest,
+                pages_free=self.mgr.free_pages)
             for cb in self.on_tick:
                 cb(smp)
         self.ticks += 1

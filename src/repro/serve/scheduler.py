@@ -27,8 +27,12 @@ class SlotWork:
     """What one slot contributes to the tick (host-side request view)."""
     slot: int
     kind: str            # "prefill" | "decode"
-    tokens: np.ndarray   # (k,) int32 — chunk of prompt, or [last_token]
+    tokens: np.ndarray   # (k,) int32 — chunk of prompt, or [last_token, ...]
     completes: bool = False  # this chunk feeds the final prompt token
+    # real-token count when tokens carries padding (speculative decode pads
+    # short draft runs to the fixed verify width so the fused step keeps one
+    # compile bucket); None = len(tokens)
+    n_valid: Optional[int] = None
 
 
 @dataclass
@@ -54,12 +58,13 @@ def compose(work: List[SlotWork], pos: np.ndarray, slots: int,
     """
     if not work:
         return None
-    S = chunk if any(w.kind == "prefill" for w in work) else 1
+    S = (chunk if any(w.kind == "prefill" for w in work)
+         else max(len(w.tokens) for w in work))
     tokens = np.zeros((slots, S), np.int32)
     n_valid = np.zeros(slots, np.int32)
     for w in work:
         k = len(w.tokens)
         tokens[w.slot, :k] = w.tokens
-        n_valid[w.slot] = k
+        n_valid[w.slot] = k if w.n_valid is None else w.n_valid
     return TickPlan(tokens=tokens, pos=pos.astype(np.int32).copy(),
                     n_valid=n_valid, work=work)

@@ -92,6 +92,79 @@ class TestMambaScan:
                                    rtol=2e-4, atol=2e-4)
 
 
+class TestPagedAttention:
+    """Block-table decode attention: kernel vs jnp oracle vs dense _sdpa."""
+
+    def _paged_case(self, B=3, H=4, Hkv=2, D=16, ps=8, npages=4,
+                    dtype=jnp.float32):
+        """A scattered layout: pages permuted across the pool, one slot
+        fully disabled (pos = -1), one mid-page (pos=7), one mid-pool."""
+        rng = np.random.default_rng(0)
+        P = B * npages
+        q = jnp.asarray(rng.standard_normal((B, H, D)), dtype)
+        k = jnp.asarray(rng.standard_normal((P + 1, ps, Hkv, D)), dtype)
+        v = jnp.asarray(rng.standard_normal((P + 1, ps, Hkv, D)), dtype)
+        ids = np.full((P + 1, ps), -1, np.int32)
+        perm = rng.permutation(P)
+        bt = np.full((B, npages), P, np.int32)  # P == the null page
+        pos = np.array([29, 7, -1], np.int32)
+        for b in range(B):
+            if pos[b] < 0:
+                continue
+            for j in range(pos[b] // ps + 1):
+                pg = perm[b * npages + j]
+                bt[b, j] = pg
+                span = np.arange(j * ps, (j + 1) * ps)
+                ids[pg] = np.where(span <= pos[b], span, -1)
+        return (q, k, v, jnp.asarray(ids), jnp.asarray(bt),
+                jnp.asarray(pos))
+
+    @pytest.mark.parametrize("window", [0, 12])
+    def test_matches_ref(self, window):
+        q, k, v, ids, bt, pos = self._paged_case()
+        out = ops.paged_attention_decode(q, k, v, ids, bt, pos,
+                                         window=window)
+        ref = kref.paged_attention_ref(q, k, v, ids, bt, pos,
+                                       window=window)
+        np.testing.assert_allclose(np.asarray(out[:2]), np.asarray(ref[:2]),
+                                   rtol=1e-5, atol=1e-5)
+        # pos = -1 disables a row: zero output, not mean(v) — exp(m - m)
+        # over an all-masked page must not leak mass into l
+        assert (np.asarray(out[2]) == 0.0).all()
+        assert (np.asarray(ref[2]) == 0.0).all()
+
+    def test_bf16_pools(self):
+        q, k, v, ids, bt, pos = self._paged_case(dtype=jnp.bfloat16)
+        out = ops.paged_attention_decode(q, k, v, ids, bt, pos)
+        ref = kref.paged_attention_ref(q, k, v, ids, bt, pos)
+        np.testing.assert_allclose(np.asarray(out[:2], np.float32),
+                                   np.asarray(ref[:2], np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_ref_bitwise_sdpa_at_page_eq_maxlen(self):
+        """With page_size == max_len and an identity block table the paged
+        oracle degenerates to exactly the model's _sdpa — the anchor the
+        engine's bitwise paged == contiguous pin rides on."""
+        from repro.models.attention import _sdpa
+        rng = np.random.default_rng(1)
+        B, H, Hkv, D, T = 3, 4, 2, 16, 32
+        q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, T, Hkv, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, T, Hkv, D)), jnp.float32)
+        pos = jnp.asarray([29, 7, 0], jnp.int32)
+        span = jnp.arange(T)[None, :]
+        ids = jnp.where(span <= pos[:, None], span, -1)
+        bt = jnp.arange(B, dtype=jnp.int32)[:, None]
+        ref = kref.paged_attention_ref(q, k, v, ids, bt, pos)
+        mask = (ids >= 0) & (ids <= pos[:, None])
+        dense = _sdpa(q[:, None], k, v, mask[:, None, None, None, :],
+                      None)[:, 0]
+        assert (np.asarray(ref) == np.asarray(dense)).all()
+        out = ops.paged_attention_decode(q, k, v, ids, bt, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                                   rtol=1e-5, atol=1e-5)
+
+
 class TestOverscaleMatmul:
     @pytest.mark.parametrize("M,K,N", [(64, 96, 80), (200, 128, 130),
                                        (128, 256, 128)])

@@ -84,6 +84,31 @@ class TestKVCacheManager:
         mgr.free(s)
         assert mgr.pages_in_use == 0 and mgr.peak_pages == 2
 
+    def test_incremental_pages_pinned_against_recount(self, dense):
+        """pages_in_use is maintained incrementally (O(1) per advance);
+        pin it against the from-scratch recount through a full slot
+        lifecycle including preemption restore."""
+        _, model, _ = dense
+        mgr = KVCacheManager(model, slots=3, max_len=32, page_size=8)
+        assert mgr.pages_in_use == mgr.recount_pages() == 0
+        a = mgr.allocate(3)
+        b = mgr.allocate(9)
+        assert mgr.pages_in_use == mgr.recount_pages() == 2
+        mgr.advance([a, b], [3, 9])       # b crosses into page 2
+        assert mgr.pages_in_use == mgr.recount_pages() == 3
+        mgr.advance([b], [8])             # page 3
+        assert mgr.pages_in_use == mgr.recount_pages() == 4
+        rows, pos = mgr.read_rows([b]), int(mgr.pos[b])
+        mgr.free(b)
+        assert mgr.pages_in_use == mgr.recount_pages() == 1
+        c = mgr.allocate(1)
+        mgr.restore(c, rows, pos)         # resume rewinds the page count
+        assert mgr.pages_in_use == mgr.recount_pages() == 4
+        mgr.free(a)
+        mgr.free(c)
+        assert mgr.pages_in_use == mgr.recount_pages() == 0
+        assert mgr.peak_pages == 4
+
     def test_write_rows_scatters_one_request(self, dense):
         _, model, params = dense
         mgr = KVCacheManager(model, slots=3, max_len=16)

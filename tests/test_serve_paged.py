@@ -1,0 +1,339 @@
+"""True paged attention (repro.serve.cache.PagedKVCacheManager + engine).
+
+The §8 acceptance pins: block-table indirection is a memory-layout change,
+never a numerics change — paged replay is bitwise the contiguous replay
+(dense + SWA), the speculative accepted prefix is bitwise the greedy
+sequence, and the free-list allocator admits strictly more concurrent
+work than contiguous slots at the same page budget (the churn workload).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import scenarios as sc
+from repro.configs import registry
+from repro.models.model import Model
+from repro.serve.cache import (ExpandablePagedKVCacheManager, PageAllocator,
+                               PagedKVCacheManager)
+from repro.serve.engine import Engine, Request
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = registry.get("llama3.2-1b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def swa():
+    cfg = registry.get("mixtral-8x7b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, model, params
+
+
+def _prompt(cfg, rid, n=5):
+    return ((np.arange(n) * 3 + rid * 7) % cfg.vocab_size).astype(np.int32)
+
+
+def _outs(cfg, model, params, n_req=4, max_new=12, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("eos_id", -1)
+    kw.setdefault("warmup", False)
+    eng = Engine(model, params, **kw)
+    for rid in range(n_req):
+        eng.submit(Request(rid, _prompt(cfg, rid), max_new=max_new))
+    eng.run()
+    return eng, {r.rid: tuple(r.out) for r in eng.finished}
+
+
+class TestPageAllocator:
+    def test_alloc_free_roundtrip(self):
+        al = PageAllocator(4)
+        assert al.free_pages == 4 and al.used_pages == 0
+        a = al.alloc(3)
+        assert len(a) == 3 and len(set(a)) == 3
+        assert al.free_pages == 1 and al.used_pages == 3
+        al.free(a[:2])
+        assert al.free_pages == 3
+        b = al.alloc(3)  # reuses the freed pages
+        assert al.free_pages == 0 and sorted(a[2:] + b) == list(range(4))
+
+    def test_exhaustion_raises(self):
+        al = PageAllocator(2)
+        al.alloc(2)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            al.alloc(1)
+
+    def test_double_free_and_invalid_page_raise(self):
+        al = PageAllocator(3)
+        pages = al.alloc(2)
+        al.free(pages)
+        with pytest.raises(ValueError, match="double free"):
+            al.free([pages[0]])
+        with pytest.raises(ValueError, match="invalid page"):
+            al.free([3])
+        with pytest.raises(ValueError, match="invalid page"):
+            al.free([-1])
+        # the free list stayed sane: all three pages allocate exactly once
+        assert sorted(al.alloc(3)) == [0, 1, 2]
+
+
+class TestPagedManagerLifecycle:
+    def test_non_contiguous_allocation(self, dense):
+        """Pages come from the free list, not from a per-slot span: after
+        interleaved alloc/free, a slot's block table holds non-adjacent
+        physical pages (the whole point of the indirection)."""
+        _, model, _ = dense
+        mgr = PagedKVCacheManager(model, slots=3, max_len=64, page_size=16)
+        a = mgr.allocate(5)
+        b = mgr.allocate(5)
+        mgr.advance([a], [20])  # a claims a second page *after* b's first
+        pages_a = list(mgr.block_table[a, :2])
+        assert pages_a[1] - pages_a[0] != 1  # b's page sits in between
+        freed = int(mgr.block_table[b, 0])
+        mgr.free(b)
+        assert not mgr.allocator._owned[freed]  # b's page back in the pool
+        c = mgr.allocate(5)  # new slot allocates without relocating a
+        assert list(mgr.block_table[a, :2]) == pages_a
+        assert mgr.block_table[c, 0] != mgr.null_page
+        assert mgr.pages_in_use == mgr.recount_pages() == 3
+
+    def test_incremental_pages_pinned_against_recount(self, dense):
+        """The O(1) counter, the O(slots*width) recount, and the allocator
+        ledger agree after every mutation."""
+        _, model, _ = dense
+        mgr = PagedKVCacheManager(model, slots=2, max_len=64, page_size=16)
+
+        def pinned():
+            assert (mgr.pages_in_use == mgr.recount_pages()
+                    == mgr.allocator.used_pages)
+
+        s = mgr.allocate(5)
+        pinned()
+        mgr.advance([s], [30])  # 30 tokens -> 2 pages
+        pinned()
+        assert mgr.pages_in_use == 2
+        mgr.extend(s, 50)
+        pinned()
+        assert mgr.pages_in_use == 4 and mgr.peak_pages == 4
+        mgr.trim(s, 30)
+        pinned()
+        assert mgr.pages_in_use == 2
+        t = mgr.allocate(3)
+        pinned()
+        mgr.free(s)
+        mgr.free(t)
+        pinned()
+        assert mgr.pages_in_use == 0 and mgr.peak_pages == 4
+
+    def test_trim_is_the_spec_rollback(self, dense):
+        _, model, _ = dense
+        mgr = PagedKVCacheManager(model, slots=1, max_len=64, page_size=16)
+        s = mgr.allocate(4)
+        mgr.extend(s, 64)
+        assert mgr.slot_pages(s) == 4
+        assert mgr.trim(s, 17) == 2  # keep ceil(17/16) = 2 pages
+        assert mgr.slot_pages(s) == 2 and mgr.allocator.free_pages == 2
+        assert mgr.trim(s, 32) == 0  # trim never grows
+        assert mgr.trim(s, 0) == 1   # but always keeps one page
+        assert mgr.slot_pages(s) == 1
+
+    def test_slot_free_guards(self, dense):
+        _, model, _ = dense
+        mgr = PagedKVCacheManager(model, slots=2, max_len=64, page_size=16)
+        s = mgr.allocate(4)
+        mgr.free(s)
+        with pytest.raises(ValueError, match="double free"):
+            mgr.free(s)
+        with pytest.raises(ValueError, match="invalid slot"):
+            mgr.free(2)
+
+    def test_inverse_map_inverts_the_block_table(self, dense):
+        _, model, _ = dense
+        mgr = PagedKVCacheManager(model, slots=2, max_len=64, page_size=16)
+        a = mgr.allocate(5)
+        mgr.advance([a], [20])
+        b = mgr.allocate(5)
+        inv = mgr.inverse_map()
+        B, W = mgr.block_table.shape
+        for s in range(B):
+            for j in range(W):
+                pg = mgr.block_table[s, j]
+                if pg != mgr.null_page:
+                    assert inv[pg] == s * W + j
+        # unallocated pages and the null page map to the fill source
+        assert inv[mgr.null_page] == B * W
+        unalloc = set(range(mgr.total_pages)) - {
+            int(p) for p in mgr.block_table.reshape(-1)
+            if p != mgr.null_page}
+        assert all(inv[p] == B * W for p in unalloc)
+
+    def test_null_page_stays_invalid_through_scatter_all(self, dense):
+        """Every unallocated block-table entry aliases the null page; the
+        fused-step writeback must leave it (and any unallocated page)
+        invalid, or stale entries would surface under a future owner."""
+        import jax.numpy as jnp
+        _, model, _ = dense
+        mgr = PagedKVCacheManager(model, slots=2, max_len=64, page_size=16)
+        s = mgr.allocate(4)
+        bt = jnp.asarray(mgr.block_table, jnp.int32)
+        logical = mgr.gather_logical(mgr.pool, bt)
+        # poison the logical view everywhere; only owned pages may keep it
+        logical = jax.tree_util.tree_map(
+            lambda x: jnp.full_like(x, 7), logical)
+        pool = mgr.scatter_all(mgr.pool, logical,
+                               jnp.asarray(mgr.inverse_map(), jnp.int32))
+        ids = np.asarray(pool["stack"]["pos_ids"])
+        owned = int(mgr.block_table[s, 0])
+        assert (ids[:, owned] == 7).all()          # owned page written
+        assert (ids[:, mgr.null_page] == -1).all()  # null page inert
+        unowned = next(p for p in range(mgr.total_pages) if p != owned)
+        assert (ids[:, unowned] == -1).all()       # unallocated page inert
+
+
+class TestPagedEngineBitwise:
+    def test_dense_paged_and_spec_match_contiguous(self, dense):
+        cfg, model, params = dense
+        _, ref = _outs(cfg, model, params)
+        _, paged = _outs(cfg, model, params, paged=True)
+        eng, spec = _outs(cfg, model, params, paged=True, speculate=3)
+        assert ref == paged, "block-table indirection changed the tokens"
+        assert ref == spec, "speculative accepted prefix != greedy"
+        assert eng.spec_accepted > 0 and eng.spec_accept_rate > 0.0
+        assert eng.mgr.pages_in_use == eng.mgr.recount_pages() == 0
+
+    def test_swa_paged_matches_contiguous(self, swa):
+        cfg, model, params = swa
+        _, ref = _outs(cfg, model, params, n_req=3, max_new=8)
+        _, paged = _outs(cfg, model, params, n_req=3, max_new=8, paged=True)
+        assert ref == paged
+
+    def test_spec_requires_greedy_and_full_window(self, dense):
+        cfg, model, params = dense
+        with pytest.raises(ValueError, match="greedy"):
+            Engine(model, params, batch_slots=2, max_len=64,
+                   temperature=0.7, speculate=2, warmup=False)
+        swa_cfg = cfg.replace(sliding_window=32)
+        with pytest.raises(ValueError, match="sliding_window"):
+            Engine(Model(swa_cfg), params, batch_slots=2, max_len=64,
+                   speculate=2, warmup=False)
+
+
+class TestServeReplayPaged:
+    """Fingerprint-level pins on the full closed loop (engine + admission
+    + rails + energy ledger)."""
+
+    @pytest.fixture(scope="class")
+    def replays(self, dense):
+        _, model, params = dense
+        day = sc.serve_day(ticks=6, cool_at=3)
+        wl = sc.poisson_burst(burst_at=1, burst_n=5, seed=0)
+        kw = dict(engine_steps=4, drain_ticks=16)
+        return {
+            "contig": sc.serve_replay(day, wl, model, params, **kw),
+            "paged": sc.serve_replay(day, wl, model, params, paged=True,
+                                     **kw),
+            "spec": sc.serve_replay(day, wl, model, params, paged=True,
+                                    speculate=3, **kw),
+        }
+
+    def test_paged_fingerprint_bitwise_contiguous(self, replays):
+        # outputs AND caps AND energy: the whole day replays bit for bit
+        assert replays["paged"].fingerprint == replays["contig"].fingerprint
+
+    def test_spec_outputs_match_but_day_compresses(self, replays):
+        """Speculation must not change a single token — but it legitimately
+        changes the *day* (fewer engine ticks -> different load trace ->
+        different rail/energy fingerprint), so the pin is output equality,
+        not fingerprint equality."""
+        assert replays["spec"].outputs == replays["contig"].outputs
+        assert replays["spec"].finished == replays["contig"].finished
+
+
+class TestChurnAdmission:
+    def test_paged_admits_strictly_more_at_equal_page_budget(self, dense):
+        """16 pages = 4 contiguous slots (max_len=64, page_size=16). The
+        paged engine runs 8 slots over the same 16 pages because short
+        churn requests only ever hold 1-2 pages each — the vLLM
+        fragmentation argument, live."""
+        cfg, model, params = dense
+        wl = sc.churn_requests()
+
+        def run(**kw):
+            eng = Engine(model, params, max_len=64, eos_id=-1,
+                         warmup=False, **kw)
+            for a in wl.arrivals:
+                eng.submit(Request(a.rid, _prompt(cfg, a.rid, a.prompt_len),
+                                   max_new=a.max_new))
+            peak = 0
+            while eng.step():
+                peak = max(peak, sum(r is not None for r in eng.slot_req))
+                assert (eng.mgr.pages_in_use == eng.mgr.recount_pages())
+            assert len(eng.finished) == len(wl.arrivals)
+            return eng, peak
+
+        eng_c, peak_c = run(batch_slots=4)              # 4 slots * 4 pages
+        eng_p, peak_p = run(batch_slots=8, paged=True, total_pages=16)
+        assert peak_c <= 4
+        assert peak_p > peak_c, (peak_p, peak_c)
+        assert eng_p.mgr.peak_pages <= 16
+        assert eng_p.mgr.pages_in_use == eng_p.mgr.recount_pages() == 0
+        # same tokens either way — admission order changes, outputs don't
+        assert ({r.rid: tuple(r.out) for r in eng_c.finished}
+                == {r.rid: tuple(r.out) for r in eng_p.finished})
+
+
+class TestExpandablePagedGrowth:
+    def test_growth_widens_tables_without_relocating_pages(self, dense):
+        _, model, _ = dense
+        mgr = ExpandablePagedKVCacheManager(model, slots=2, max_len=64,
+                                            initial_len=16, page_size=16)
+        assert mgr.capacity == 16 and mgr.block_table.shape[1] == 1
+        s = mgr.allocate(5)
+        live = int(mgr.block_table[s, 0])
+        mgr.ensure(40)
+        assert mgr.capacity == 64 and mgr.grows >= 1
+        assert mgr.block_table[s, 0] == live  # live page never relocates
+        assert (mgr.block_table[:, 1:] == mgr.null_page).all()  # new: invalid
+        assert mgr.pages_in_use == mgr.recount_pages() == 1
+        mgr.advance([s], [40])  # claim across the grown width
+        assert mgr.block_table[s, 0] == live
+        assert mgr.slot_pages(s) == 3
+        assert mgr.peak_pages == 3  # no undercount from the growth
+
+    def test_engine_results_match_contiguous(self, dense):
+        cfg, model, params = dense
+        _, ref = _outs(cfg, model, params, n_req=3, max_new=20)
+        _, exp = _outs(cfg, model, params, n_req=3, max_new=20,
+                       paged=True, expandable=True)
+        assert ref == exp
+
+
+class TestPagedPreemption:
+    def test_page_exact_eviction_and_bitwise_resume(self, dense):
+        cfg, model, params = dense
+        _, ref = _outs(cfg, model, params, n_req=2, max_new=16)
+
+        eng = Engine(model, params, batch_slots=2, max_len=64, eos_id=-1,
+                     warmup=False, paged=True)
+        for rid in range(2):
+            eng.submit(Request(rid, _prompt(cfg, rid), max_new=16))
+        for _ in range(4):
+            eng.step()
+        pages_before = eng.mgr.pages_in_use
+        assert eng.preempt_to(1) == 1
+        # page-exact accounting: the parked payload counts exactly the
+        # pages the victim held, and those pages actually returned to the
+        # admission budget (in_use dropped by the same amount)
+        victim_rid = eng.queue[0].rid
+        held = eng.pool.put_pages(victim_rid)
+        assert held >= 1 and eng.pool.pages_held == held
+        assert eng.mgr.pages_in_use == pages_before - held
+        assert eng.mgr.pages_in_use == eng.mgr.recount_pages()
+        eng.run()
+        assert {r.rid: tuple(r.out) for r in eng.finished} == ref
+        assert eng.pool.pages_held == 0 and eng.preempts == 1
