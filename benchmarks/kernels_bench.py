@@ -362,6 +362,66 @@ def closed_loop(quick: bool = True) -> Dict:
                      controller=controller)
     assert crep.recover_ticks, "chaos day completed no watchdog episode"
     out["mean_ticks_to_recover"] = crep.mean_ticks_to_recover
+
+    # -- fleet failure domains (DESIGN.md §10) -------------------------------
+    # the multi-pod control tick on the LUT fast path: fan-out poll, two
+    # pod decides off slices of one shared RailField, one global settle.
+    # Pure numpy + one thermal solve per tick -> gated like the flat tick.
+    from repro.ft.elastic import ElasticActuator, ElasticWorkAssignment
+    from repro.launch.mesh import PodTopology
+
+    n = rt.substrate.n_domains
+    fleet2 = ctl.FleetActuator.from_runtime(rt, field=field)
+    elastic = ElasticActuator(ElasticWorkAssignment(n))
+    fan = ctl.FanoutTelemetry(fleet2)
+    efan = ctl.FanoutTelemetry(elastic)
+    amb2 = ctl.AmbientSensor(25.0)
+    ctx = ctl.TickContext()
+    pods = []
+    for i, (lo, hi) in enumerate(PodTopology.partition(n, 2)):
+        bus = ctl.TelemetryBus([amb2, fan.view(lo, hi, primary=(i == 0)),
+                                efan.view(lo, hi)])
+        pc = ctl.LutController(ctl.PodPlanner(rt.planner, lo, hi, ctx=ctx),
+                               field=field.slice_chips(lo, hi))
+        pods.append(ctl.PodDomain(i, lo, hi, bus, pc,
+                                  ctl.PodRailChannel(fleet2, lo, hi)))
+    floop = ctl.FleetLoop(pods, fleet2, elastic=elastic, ctx=ctx)
+    floop.step(now=0.0)  # cold start: both pods share one memoized solve
+    iters = 5
+    t0 = time.perf_counter()
+    for k in range(iters):
+        amb2.trace = 25.0 + 0.1 * (k + 1)
+        floop.step(now=1.0 + k)
+    out["fleet_tick_us"] = (time.perf_counter() - t0) / iters * 1e6
+
+    # pod failover: the quarantine actuation end to end — drop staged rail
+    # writes and pin the slice to safe state, condemn the pod's chips onto
+    # the survivors, drain the pod engine's active slots + queue to the
+    # shared host page pool and resubmit round-robin.  Deterministic work
+    # (page-exact gathers dominate), so the --check gate pins it.
+    from repro.serve.cache import HostPagePool
+    pool = HostPagePool()
+    for pod in pods[:2]:
+        pod.engine = Engine(model, params, batch_slots=2, max_len=64,
+                            eos_id=-1, warmup=False, pool=pool)
+    for rid in range(4):
+        pods[1].engine.submit(
+            Request(100 + rid, np.arange(6) % cfg.vocab_size, max_new=48))
+    pods[1].engine.step()  # two active mid-decode, two queued
+    lat = []
+    for k in range(-1, 3 if quick else 8):  # round -1: untimed compile
+        t0 = time.perf_counter()
+        floop._quarantine(pods[1], now=11.0 + k, events=[])
+        if k >= 0:
+            lat.append(time.perf_counter() - t0)
+        # untimed: undo for the next round (restore shares + rail pins,
+        # hand the migrated requests back to the victim pod)
+        floop._restore(pods[1], now=11.5 + k, events=[])
+        back = pods[0].engine.drain()
+        for req in back:
+            pods[1].engine.submit(req)
+        pods[1].engine.step()
+    out["pod_failover_ms"] = float(np.mean(lat)) * 1e3
     return out
 
 
@@ -377,6 +437,8 @@ def _gated(k: str) -> bool:
     """jnp-path ``*_us`` entries plus the warm RailField build are gated;
     interpret-mode and load-dependent latency entries are not."""
     if k == "railfield_build_ms":  # warm device-call-bound: stable
+        return True
+    if k == "pod_failover_ms":  # deterministic containment actuation
         return True
     if k == "mean_ticks_to_recover":  # deterministic chaos-day replay:
         return True                   # a drift here is a logic change

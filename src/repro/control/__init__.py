@@ -31,6 +31,10 @@ from repro.control.controller import (Action, BoostRail, Controller,
                                       Preempt, RailBackoff, Rebalance,
                                       Restore, SafeState, SetRails, Throttle)
 from repro.control.faults import ChaosTelemetry, ControlFaultModel
+from repro.control.fleet import (DEGRADED, DRAINED, HEALTHY, QUARANTINED,
+                                 FanoutTelemetry, FleetLoop, FleetReport,
+                                 PodDomain, PodPlanner, PodRailChannel,
+                                 PodTelemetryView, TickContext)
 from repro.control.loop import ControlLoop, LoopReport
 from repro.control.lut import (DEFAULT_UTIL_KNOTS, DynamicLut, RailField,
                                sweep_points)
@@ -52,6 +56,10 @@ __all__ = [
     "SafeStateSample",
     # fault containment (§9)
     "ControlFaultModel", "ChaosTelemetry",
+    # fleet failure domains (§10)
+    "FleetLoop", "FleetReport", "PodDomain", "PodRailChannel",
+    "PodPlanner", "TickContext", "FanoutTelemetry", "PodTelemetryView",
+    "HEALTHY", "DEGRADED", "QUARANTINED", "DRAINED",
     # decisions
     "Controller", "LutController", "ControllerStats",
     "AdmissionController", "AdmissionStats",

@@ -75,6 +75,7 @@ class FleetActuator:
         self.backoff_log: List[RailBackoff] = []  # §V SDC rail retreats
         self.util_applied = np.ones(chips, np.float32)  # last settled util
         self.T = np.asarray(substrate.T0({"t_amb": t_amb}))
+        self.p_chip = np.zeros(chips, np.float64)  # last settled chip power
         self.readout: Optional[FleetReadout] = None
         self._nominal_cache = {}
         # §9 verify-after-write rail channel: a ControlFaultModel NACKs
@@ -144,24 +145,59 @@ class FleetActuator:
         called by the loop before actions land."""
         self._now = float(now)
 
-    def _program(self, vc: np.ndarray, vs: np.ndarray) -> None:
+    def _program(self, vc: np.ndarray, vs: np.ndarray,
+                 chips: Optional[np.ndarray] = None) -> None:
         """Land the target rails chip by chip.  Without a fault model this
         is one atomic write (the legacy path, bitwise identical).  With
         one, each chip write is verify-after-write: a NACKed chip retries
         with exponential backoff up to ``max_retries``, then pins to
-        nominal safe-state rails until :meth:`clear_safe_state`."""
-        n = vc.shape[0]
-        for c in self.safe_state:  # pinned chips ignore new targets
-            vc[c] = TF.V_CORE_NOM
-            vs[c] = TF.V_SRAM_NOM
-        if self.write_faults is None:
-            self.v_core, self.v_sram = vc, vs
+        nominal safe-state rails until :meth:`clear_safe_state`.
+
+        ``chips`` (global indices) addresses a *slice* of the fleet — a
+        per-pod rail channel (``control.fleet``) programs only its own
+        chips; ``vc``/``vs`` then align with ``chips``.  ``None`` keeps
+        the full-width legacy path untouched."""
+        if chips is None:
+            n = vc.shape[0]
+            for c in self.safe_state:  # pinned chips ignore new targets
+                vc[c] = TF.V_CORE_NOM
+                vs[c] = TF.V_SRAM_NOM
+            if self.write_faults is None:
+                self.v_core, self.v_sram = vc, vs
+                return
+            pending = np.array(
+                [c for c in range(n) if c not in self.safe_state], np.int64)
+            for c in self.safe_state:
+                self.v_core[c] = TF.V_CORE_NOM
+                self.v_sram[c] = TF.V_SRAM_NOM
+            self._retry_writes(pending, vc, vs, pending.copy())
             return
-        pending = np.array([c for c in range(n) if c not in self.safe_state],
-                           np.int64)
-        for c in self.safe_state:
-            self.v_core[c] = TF.V_CORE_NOM
-            self.v_sram[c] = TF.V_SRAM_NOM
+        chips = np.asarray(chips, np.int64)
+        vc = np.asarray(vc, np.float32).copy()
+        vs = np.asarray(vs, np.float32).copy()
+        safe = np.array([int(c) in self.safe_state for c in chips], bool)
+        vc[safe] = TF.V_CORE_NOM
+        vs[safe] = TF.V_SRAM_NOM
+        if self.write_faults is None:
+            self.v_core[chips] = vc
+            self.v_sram[chips] = vs
+            return
+        self.v_core[chips[safe]] = TF.V_CORE_NOM
+        self.v_sram[chips[safe]] = TF.V_SRAM_NOM
+        # targets indexed per-slice: write through the global chip ids
+        pend_local = np.nonzero(~safe)[0].astype(np.int64)
+        full_vc = self.v_core.copy()
+        full_vs = self.v_sram.copy()
+        full_vc[chips] = vc
+        full_vs[chips] = vs
+        self._retry_writes(chips[pend_local], full_vc, full_vs,
+                           chips[pend_local].copy())
+        return
+
+    def _retry_writes(self, pending: np.ndarray, vc: np.ndarray,
+                      vs: np.ndarray, _orig) -> None:
+        """Verify-after-write retry ladder over ``pending`` global chips,
+        targets taken from full-width ``vc``/``vs``."""
         delay = self.backoff_us
         for attempt in range(self.max_retries + 1):
             nack = np.asarray(self.write_faults.nack(
@@ -220,6 +256,7 @@ class FleetActuator:
             T = np.asarray(thermal.solve(p * 1e3, m, n, t_amb,
                                          self.substrate.thermal_cfg, T))
         self.T = T
+        self.p_chip = np.asarray(p)  # per-chip power at the applied rails
         pod = float(p.sum())
         p_nom = self._nominal_power(float(t_amb), us)
         self.readout = FleetReadout(

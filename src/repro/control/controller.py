@@ -264,6 +264,14 @@ class LutController:
         self.planner.T_last = None  # first replan restarts deterministic
 
     # ------------------------------------------------------------------
+    @property
+    def watchdog_level(self) -> int:
+        """Current watchdog ladder rung: 0 normal, 1 fast-path only,
+        2 frozen rails.  The fleet health state machine (``control.fleet``)
+        aggregates this per pod."""
+        return self._degrade
+
+    # ------------------------------------------------------------------
     def _replan_reason(self, snap: Snapshot,
                        util: Optional[np.ndarray]) -> Optional[str]:
         t = snap.t_amb

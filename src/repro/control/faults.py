@@ -124,6 +124,26 @@ class ControlFaultModel:
         self._r_sensor = np.random.default_rng((self.seed, 0xC1A05))
         self._r_nack = np.random.default_rng((self.seed, 0x9ACC))
 
+    def for_pod(self, pod: int) -> "ControlFaultModel":
+        """A pod-decorrelated clone for ``control.fleet``: identical fault
+        classes, rates, windows and scripted ticks, but pod > 0 derives
+        its streams from a seed threaded with the pod index, so sibling
+        pods do not replay the same fault sequence.  ``for_pod(0)`` keeps
+        the base seed — a single-pod fleet draws bitwise the same chaos
+        as the flat loop."""
+        seed = (self.seed if pod == 0
+                else (self.seed + 0x9E3779B97F4A7C15 * int(pod)) % (1 << 63))
+        return ControlFaultModel(
+            rate=self.rate, seed=seed,
+            dropout=self.p["dropout"], spike=self.p["spike"],
+            stale=self.p["stale"], stuck=self.p["stuck"],
+            nack=self.nack_p,
+            sensor_window=self.sensor_window,
+            nack_window=self.nack_window,
+            spike_c=self.spike_c, stuck_ticks=self.stuck_ticks,
+            deadline_misses=self.deadline_misses,
+            solver_faults=self.solver_faults)
+
     @staticmethod
     def _in(window: Optional[Tuple[int, int]], now: float) -> bool:
         return window is None or window[0] <= now < window[1]

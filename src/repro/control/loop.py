@@ -26,6 +26,7 @@ class LoopReport:
     snapshot: Snapshot
     actions: List[Action]
     readouts: List = field(default_factory=list)
+    pod: Optional[int] = None  # which pod ticked (None = single-pod loop)
 
     @property
     def readout(self):

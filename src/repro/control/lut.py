@@ -135,6 +135,19 @@ class RailField:
         # (conservative, but an excursion worth counting — ROADMAP item 3)
         self.clamped_below = 0
 
+    def slice_chips(self, lo: int, hi: int) -> "RailField":
+        """A pod's view of the fleet field: chip columns ``[lo, hi)`` of
+        every table, same knots.  Bilinear lookup interpolates each chip
+        independently, so looking up a slice is bitwise what slicing a
+        full-fleet lookup would return — the per-pod controllers of
+        ``control.fleet`` share ONE ``FleetPlanner.rail_field`` build."""
+        if not (0 <= lo < hi <= self.chips):
+            raise ValueError(f"chip slice [{lo}, {hi}) outside the fleet's "
+                             f"{self.chips} chips")
+        return RailField(
+            self.t, self.u, self.vc[:, :, lo:hi], self.vs[:, :, lo:hi],
+            p_nom=None if self.p_nom is None else self.p_nom[:, :, lo:hi])
+
     # ------------------------------------------------------------------
     @property
     def t_min(self) -> float:

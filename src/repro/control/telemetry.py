@@ -225,6 +225,15 @@ class TelemetryBus:
     exactly the signal the controller's stale fallback keys on.  Honest
     sources stamp nothing (stamp ``None`` = fresh) and always read
     in-range, so validation is a no-op on a clean day.
+
+    Freshness is tracked **per source** (§10 fleet tier): each accepted
+    temperature reading stamps the *source* it came from, and the
+    snapshot's ``t_amb_age`` / ``t_chip_age`` describe the provenance of
+    the value currently folded (the last writer).  One pod's sensor going
+    stale therefore cannot age out a sibling pod's last-good state when
+    several pod buses share fan-out sources during a fleet tick.  With a
+    single source per temperature kind this is exactly the old global
+    horizon.
     """
 
     # plausibility ranges [degC]: anything outside is a sensor fault, not
@@ -237,8 +246,12 @@ class TelemetryBus:
         self.sources: List[TelemetrySource] = list(sources)
         self.max_age = max_age
         self._state = Snapshot()
-        self._amb_stamp: Optional[float] = None   # last ACCEPTED ambient
-        self._chip_stamp: Optional[float] = None  # last ACCEPTED chip field
+        # last ACCEPTED reading per *source* (keyed by identity), plus the
+        # source whose value is currently folded — its stamp is the age
+        self._amb_stamp: Dict[int, float] = {}
+        self._chip_stamp: Dict[int, float] = {}
+        self._amb_src: Optional[int] = None
+        self._chip_src: Optional[int] = None
         self.quarantined_total = 0
 
     def attach(self, source: TelemetrySource) -> None:
@@ -270,13 +283,15 @@ class TelemetryBus:
                         s.quarantined += 1
                         continue
                     s.t_amb = float(smp.t_amb)
-                    self._amb_stamp = now
+                    self._amb_stamp[id(src)] = now
+                    self._amb_src = id(src)
                 elif isinstance(smp, ChipTempSample):
                     if not self._valid(smp, now, self.T_CHIP_VALID):
                         s.quarantined += 1
                         continue
                     s.t_chip = np.asarray(smp.t_chip)
-                    self._chip_stamp = now
+                    self._chip_stamp[id(src)] = now
+                    self._chip_src = id(src)
                 elif isinstance(smp, SafeStateSample):
                     s.safe_state = smp.chips
                 elif isinstance(smp, StepSample):
@@ -303,10 +318,10 @@ class TelemetryBus:
                     s.sdc_escaped += smp.escaped
                     s.sdc_checked += smp.checked
         self.quarantined_total += s.quarantined
-        s.t_amb_age = (float("inf") if self._amb_stamp is None
-                       else now - self._amb_stamp)
-        s.t_chip_age = (float("inf") if self._chip_stamp is None
-                        else now - self._chip_stamp)
+        s.t_amb_age = (float("inf") if self._amb_src is None
+                       else now - self._amb_stamp[self._amb_src])
+        s.t_chip_age = (float("inf") if self._chip_src is None
+                        else now - self._chip_stamp[self._chip_src])
         # hand the controller a stable copy; persistent state keeps arrays
         return Snapshot(now=s.now, t_amb=s.t_amb, t_chip=s.t_chip,
                         step_s=s.step_s, queued=s.queued, active=s.active,

@@ -116,6 +116,19 @@ class ElasticWorkAssignment:
         """Per-chip utilization at pod load fraction ``load``."""
         return (self.shares * np.float32(load)).astype(np.float32)
 
+    # -- §10 fleet failure domains: pod-slice views ---------------------
+    def pod_share(self, lo: int, hi: int) -> float:
+        """Fraction of the fleet's work currently assigned to chips
+        ``[lo, hi)`` — the ``control.fleet`` power-budget weight (0.0
+        while the pod is quarantined/drained, its share having been
+        spread over the survivors)."""
+        return float(self.shares[lo:hi].sum()) / float(self.shares.sum())
+
+    def condemned_in(self, lo: int, hi: int) -> Tuple[int, ...]:
+        """Condemned chips inside a pod slice, sorted — the §10 restore
+        worklist a drained pod walks when it rejoins the fleet."""
+        return tuple(sorted(c for c in self.condemned if lo <= c < hi))
+
     def mesh_hint(self, prefer_model: int = 1) -> Tuple[int, int]:
         """The (data, model) grid a real rescale would rebuild onto."""
         return choose_mesh_shape(self.n - len(self.condemned), prefer_model)

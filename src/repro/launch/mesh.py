@@ -110,6 +110,25 @@ class PodTopology:
         return -1 if rank is None else self.chip_of_rank(rank)
 
     # ------------------------------------------------------------------
+    def chip_range(self, pod: int) -> Tuple[int, int]:
+        """Fleet-wide ``[lo, hi)`` chip indices of one pod's slice (chips
+        are laid out pod-major, row-major inside the pod)."""
+        if not 0 <= pod < self.n_pods:
+            raise ValueError(f"pod {pod} outside fleet of {self.n_pods}")
+        return pod * self.chips_per_pod, (pod + 1) * self.chips_per_pod
+
+    @staticmethod
+    def partition(n_chips: int, n_pods: int) -> Tuple[Tuple[int, int], ...]:
+        """Contiguous ``[lo, hi)`` chip slices dividing ``n_chips`` into
+        ``n_pods`` failure domains (``control.fleet``'s default layout).
+        Requires an even split: a pod is a physical unit, not a remainder."""
+        if n_pods <= 0 or n_chips % n_pods:
+            raise ValueError(
+                f"{n_chips} chips do not split into {n_pods} equal pods")
+        per = n_chips // n_pods
+        return tuple((p * per, (p + 1) * per) for p in range(n_pods))
+
+    # ------------------------------------------------------------------
     @classmethod
     def from_mesh(cls, mesh, workers_per_host: Optional[int] = None
                   ) -> "PodTopology":

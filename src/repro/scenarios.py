@@ -74,6 +74,10 @@ class Scenario:
     # replay (a factory keeps Scenario pure data and every replay aligned
     # on the same fault streams); None = clean control plane
     chaos: Optional[Callable[[], "ctl.ControlFaultModel"]] = None
+    # §10 fleet tier: confine the chaos to ONE pod's failure domain
+    # (fleet_replay); None = fleet-wide chaos (every pod draws its own
+    # pod-seeded stream via ControlFaultModel.for_pod)
+    chaos_pod: Optional[int] = None
     description: str = ""
 
     def ambient_at(self, tick: int) -> float:
@@ -234,6 +238,42 @@ def chaos_day(ticks: int = 48, base: float = 25.0, amp: float = 7.0,
         description="sensor storm + rail NACK burst + thermal runaway")
 
 
+def pod_loss_day(ticks: int = 48, base: float = 25.0, amp: float = 7.0,
+                 rate: float = 0.8, nack_rate: float = 0.6, seed: int = 0,
+                 fail_pod: int = 1) -> Scenario:
+    """The §10 acceptance day: a diurnal fleet where ONE pod's control
+    plane goes bad mid-morning — a sensor storm, a rail-write NACK burst
+    and three consecutive missed tick deadlines, all confined to
+    ``fail_pod`` — while its siblings keep serving.  The fleet health
+    machine must walk the pod through degraded -> quarantined -> drained
+    (rails frozen at safe state, its work share and in-flight requests
+    migrated to the survivors) and, once the storm passes and the slice
+    cools below the hysteresis threshold, restore it — all inside the day.
+
+    The three scripted deadline misses pin the pod's watchdog at level
+    >= 1 across the storm head, so the walk to quarantine is
+    deterministic whatever the sensor-fault draws do.  Replayed by
+    :func:`fleet_replay` with ``n_pods >= 2``; fingerprint-pinned by
+    ``tests/test_fleet.py``."""
+    storm = (ticks // 6, ticks // 6 + max(ticks // 4, 4))
+    d = diurnal(ticks, base, amp)
+    return Scenario(
+        name="pod_loss_day", ticks=ticks,
+        ambient=d.ambient,
+        # moderate constant load: survivors absorb the lost pod's share
+        # (~2x their own) without leaving the RailField utilization axis
+        load=lambda now: 0.45,
+        chaos=lambda: ctl.ControlFaultModel(
+            rate=rate, seed=seed, nack=nack_rate,
+            # quarantinable classes dominate: the health machine keys on
+            # bus rejections and watchdog trips, not silent dropouts
+            dropout=rate * 0.25,
+            sensor_window=storm, nack_window=(storm[0], storm[0] + 2),
+            deadline_misses=(storm[0], storm[0] + 1, storm[0] + 2)),
+        chaos_pod=fail_pod,
+        description="one pod lost to control-plane chaos, then restored")
+
+
 SCENARIOS: Dict[str, Callable[[], Scenario]] = {
     "diurnal": diurnal,
     "ambient_jump": ambient_jump,
@@ -243,6 +283,7 @@ SCENARIOS: Dict[str, Callable[[], Scenario]] = {
     "sdc_storm": sdc_storm,
     "serve_day": serve_day,
     "chaos_day": chaos_day,
+    "pod_loss_day": pod_loss_day,
 }
 
 
@@ -567,6 +608,251 @@ def replay(scenario: Scenario, runtime: Optional[RT.EnergyAwareRuntime]
 
 
 # ---------------------------------------------------------------------------
+# fleet replay harness (§10: multi-pod failure domains)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FleetReplayResult:
+    """One fleet day: per-pod control under the global health authority.
+
+    ``fingerprint`` hashes exactly what :attr:`ReplayResult.fingerprint`
+    hashes, so the single-pod degenerate fleet pins bitwise against the
+    flat loop.  ``fleet_fingerprint`` drops the replan-reason ledger —
+    every pod legitimately logs its own ``cold_start`` — and is the
+    pod-count-invariance pin (rails + energy + condemned)."""
+
+    name: str
+    ticks: int
+    n_pods: int
+    replans: int
+    lut_hits: int
+    boosts: int
+    rebalances: int
+    replan_reasons: List[str]  # pod-major: pod 0's whole day, then pod 1's
+    mean_saving: float
+    energy_j: float
+    t_max: float
+    condemned: Tuple[int, ...]
+    shares: np.ndarray       # final elastic work shares (chips,)
+    rails: np.ndarray        # (ticks, 2, chips) applied (v_core, v_sram)
+    states: Dict[int, str]   # final pod health states
+    state_trace: List[Dict[int, str]]  # per-tick pod health states
+    events: List[str]        # fleet health events, in order
+    migrated: int = 0        # live-migrated in-flight requests
+    quarantines: int = 0     # pods walked to quarantine
+    pod_restores: int = 0    # pods restored through the cool-down
+    staged_commits: int = 0  # latency-buffered rail writes committed
+    # §9 containment ledger, summed over the pod controllers (NOT hashed)
+    quarantined: int = 0
+    stale_fallbacks: int = 0
+    degraded_ticks: int = 0
+    frozen_ticks: int = 0
+    safe_states: int = 0
+    below_axis_clamps: int = 0
+    write_nacks: int = 0
+    write_retries: int = 0
+    watchdog_events: List[str] = dfield(default_factory=list)
+
+    @property
+    def fingerprint(self) -> str:
+        """Determinism pin — the :attr:`ReplayResult.fingerprint` formula
+        verbatim (the degenerate-fleet bitwise contract)."""
+        h = hashlib.sha256()
+        h.update(self.rails.astype(np.float64).tobytes())
+        h.update(np.float64(self.energy_j).tobytes())
+        h.update(",".join(self.replan_reasons).encode())
+        h.update(np.asarray(sorted(self.condemned), np.int64).tobytes())
+        return h.hexdigest()[:16]
+
+    @property
+    def fleet_fingerprint(self) -> str:
+        """Pod-count-invariance pin: the physical outcome only (applied
+        rails, energy, condemned chips) — no per-pod bookkeeping."""
+        h = hashlib.sha256()
+        h.update(self.rails.astype(np.float64).tobytes())
+        h.update(np.float64(self.energy_j).tobytes())
+        h.update(np.asarray(sorted(self.condemned), np.int64).tobytes())
+        return h.hexdigest()[:16]
+
+
+def fleet_replay(scenario: Scenario, n_pods: int = 2,
+                 runtime: Optional[RT.EnergyAwareRuntime] = None,
+                 tick_s: float = 60.0, guard_band_c: float = 3.0,
+                 sweep=(10.0, 45.0, 8), util_sweep=(0.25, 1.0, 4),
+                 faults=None, amb_offset_c: float = 0.0,
+                 write_latency_s: float = 0.0,
+                 power_budget_w: Optional[float] = None,
+                 degrade_after: int = 2, quarantine_after: int = 4,
+                 restore_after: int = 3, restore_below_c: float = 70.0
+                 ) -> FleetReplayResult:
+    """Run ``scenario`` through the §10 multi-pod ``FleetLoop``.
+
+    One ``RailField`` build and one ``FleetPlanner`` serve every pod: each
+    pod's ``LutController`` sees a ``slice_chips`` view of the shared
+    field over a ``PodPlanner`` facade, its own ``TelemetryBus`` fed by
+    ``FanoutTelemetry`` slices of the shared monitor/elastic/fleet sources
+    plus its own ambient sensor (pod ``i`` reads
+    ``scenario.ambient + i * amb_offset_c``; pod 0 is the machine-room
+    reference), and a ``PodRailChannel`` over the shared actuator.
+
+    Chaos: ``scenario.chaos`` (or ``faults``) attaches per pod.  With
+    ``scenario.chaos_pod`` set, only that pod's sensors/rails/watchdog see
+    the fault plane (the pod-loss drill); otherwise every pod draws its
+    own decorrelated stream via ``ControlFaultModel.for_pod``.  With
+    ``n_pods=1`` the base model attaches exactly as :func:`replay` does.
+
+    Determinism and invariance (pinned by ``tests/test_fleet.py``):
+
+    - ``n_pods=1`` is **bitwise** the flat loop: same polls, same decide,
+      same actuator writes — ``fingerprint`` equals the
+      :func:`replay` fingerprint on the same runtime/controller config.
+    - For clean scenarios (no chaos, no hotspots, no stragglers, zero
+      ambient offsets) the physical outcome is **pod-count invariant**:
+      the per-tick fleet utilization is assembled before any pod decides,
+      replans are memoized per ``(t_amb, util)`` so every pod slices ONE
+      shared solve, and the bilinear RailField lookup commutes with chip
+      slicing — ``fleet_fingerprint`` is the same for any pod count.
+      Scenarios with per-pod fault streams, hotspots, or stragglers are
+      *not* invariant (a pod slice changes which controller sees the hot
+      chip and decorrelated NACK draws land in different order); their
+      multi-pod fingerprints are pinned as their own golden values.
+    """
+    rt = runtime if runtime is not None else RT.EnergyAwareRuntime(
+        TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                     collective_s=0.2),
+        policy="power_save")
+    from repro.control.lut import sweep_points
+    field = rt.build_field(sweep_points(*sweep), sweep_points(*util_sweep))
+    chips = rt.substrate.n_domains
+    spans = PodTopology.partition(chips, n_pods)
+    topo = PodTopology(grid=rt.substrate.grid)
+
+    det = StragglerDetector(threshold=1.5, window=8, min_samples=4)
+    mon = ctl.MonitorTelemetry(det, topology=topo)
+    assignment = ElasticWorkAssignment(chips)
+    elastic = ElasticActuator(assignment)
+    fleet = ctl.FleetActuator.from_runtime(
+        rt, t_amb=scenario.ambient_at(0), field=field)
+    if faults is None and scenario.chaos is not None:
+        faults = scenario.chaos()
+    if n_pods == 1 and faults is not None:
+        fleet.write_faults = faults  # the flat loop's exact wiring
+
+    ctx = ctl.TickContext()
+    mon_f = ctl.FanoutTelemetry(mon)
+    ela_f = ctl.FanoutTelemetry(elastic)
+    flt_f = ctl.FanoutTelemetry(fleet)
+    pods: List[ctl.PodDomain] = []
+    for i, (lo, hi) in enumerate(spans):
+        pf = None
+        if faults is not None and (scenario.chaos_pod is None
+                                   or scenario.chaos_pod == i):
+            pf = faults if n_pods == 1 else faults.for_pod(i)
+        planner = ctl.PodPlanner(rt.planner, lo, hi, ctx=ctx)
+        controller = ctl.LutController(
+            planner,
+            field=field if n_pods == 1 else field.slice_chips(lo, hi),
+            guard_band_c=guard_band_c)
+        trace = (scenario.ambient if i == 0 or amb_offset_c == 0.0 else
+                 (lambda now, off=i * amb_offset_c:
+                  scenario.ambient(now) + off))
+        amb_src = ctl.AmbientSensor(trace)
+        flt_src = flt_f.view(lo, hi, primary=(i == 0))
+        ch_kw = {}
+        if pf is not None:
+            amb_src = ctl.ChaosTelemetry(amb_src, pf)
+            flt_src = ctl.ChaosTelemetry(flt_src, pf)
+            controller.faults = pf  # scripted deadline/solver-fault ticks
+            if n_pods > 1:
+                ch_kw["write_faults"] = pf  # slice-confined NACK channel
+        bus = ctl.TelemetryBus(
+            [amb_src, _LoadTelemetry(scenario),
+             mon_f.view(lo, hi, primary=(i == 0)),
+             ela_f.view(lo, hi, primary=(i == 0)), flt_src],
+            max_age=0.75 if faults is not None else None)
+        pods.append(ctl.PodDomain(
+            index=i, lo=lo, hi=hi, bus=bus, controller=controller,
+            rails=ctl.PodRailChannel(fleet, lo, hi,
+                                     write_latency_s=write_latency_s,
+                                     **ch_kw)))
+    loop = ctl.FleetLoop(pods, fleet, elastic=elastic, ctx=ctx,
+                         power_budget_w=power_budget_w,
+                         degrade_after=degrade_after,
+                         quarantine_after=quarantine_after,
+                         restore_after=restore_after,
+                         restore_below_c=restore_below_c)
+    for pod in pods:
+        pod.controller.reset()
+    bases = []
+    for pod in pods:
+        st = pod.controller.stats
+        bases.append((st.replans, st.lut_hits, st.boosts, st.rebalances,
+                      len(st.replan_reasons), st.quarantined,
+                      st.stale_fallbacks, st.degraded_ticks,
+                      st.frozen_ticks, st.safe_states,
+                      st.below_axis_clamps, len(st.watchdog_events)))
+
+    steps_by_tick: Dict[int, List[StepRecord]] = {}
+    for rec in scenario.steps:
+        steps_by_tick.setdefault(rec.tick, []).append(rec)
+    hot_by_tick: Dict[int, List[Hotspot]] = {}
+    for h in scenario.hotspots:
+        hot_by_tick.setdefault(h.tick, []).append(h)
+
+    rails = np.zeros((scenario.ticks, 2, chips), np.float32)
+    savings, powers, t_maxes = [], [], []
+    state_trace: List[Dict[int, str]] = []
+    for tick in range(scenario.ticks):
+        for rec in steps_by_tick.get(tick, ()):
+            mon.record_step(rec.worker, tick, rec.step_s)
+        for h in hot_by_tick.get(tick, ()):
+            fleet.T = np.asarray(fleet.T).copy()
+            fleet.T[h.chip] = h.t_chip
+        rep = loop.step(now=float(tick))
+        rails[tick, 0] = fleet.v_core
+        rails[tick, 1] = fleet.v_sram
+        ro = rep.readout
+        savings.append(ro.saving)
+        powers.append(ro.pod_power_w)
+        t_maxes.append(ro.t_max)
+        state_trace.append(dict(rep.states))
+
+    agg = [0] * 12
+    reasons: List[str] = []
+    watchdog: List[str] = []
+    for pod, base in zip(pods, bases):
+        st = pod.controller.stats
+        cur = (st.replans, st.lut_hits, st.boosts, st.rebalances,
+               len(st.replan_reasons), st.quarantined, st.stale_fallbacks,
+               st.degraded_ticks, st.frozen_ticks, st.safe_states,
+               st.below_axis_clamps, len(st.watchdog_events))
+        agg = [a + (c - b) for a, (c, b) in zip(agg, zip(cur, base))]
+        reasons.extend(st.replan_reasons[base[4]:])
+        watchdog.extend(f"pod{pod.index}:{e}" if n_pods > 1 else e
+                        for e in st.watchdog_events[base[11]:])
+    return FleetReplayResult(
+        name=scenario.name, ticks=scenario.ticks, n_pods=n_pods,
+        replans=agg[0], lut_hits=agg[1], boosts=agg[2], rebalances=agg[3],
+        replan_reasons=reasons,
+        mean_saving=float(np.mean(savings)),
+        energy_j=float(np.sum(powers) * tick_s),
+        t_max=float(np.max(t_maxes)),
+        condemned=tuple(sorted(assignment.condemned)),
+        shares=assignment.shares.copy(), rails=rails,
+        states={p.index: p.state for p in pods},
+        state_trace=state_trace, events=list(loop.events),
+        migrated=loop.migrated_total,
+        quarantines=sum(1 for e in loop.events if ":quarantined@" in e),
+        pod_restores=sum(1 for e in loop.events if ":restored@" in e),
+        staged_commits=sum(p.rails.staged_commits for p in pods),
+        quarantined=agg[5], stale_fallbacks=agg[6], degraded_ticks=agg[7],
+        frozen_ticks=agg[8], safe_states=agg[9], below_axis_clamps=agg[10],
+        write_nacks=fleet.write_nacks, write_retries=fleet.write_retries,
+        watchdog_events=watchdog)
+
+
+# ---------------------------------------------------------------------------
 # serving replay harness (engine in the loop)
 # ---------------------------------------------------------------------------
 
@@ -592,6 +878,10 @@ class ServeReplayResult:
     # hashed, so pre-chaos serve fingerprints are unchanged)
     preempts: int = 0        # slot evictions to the host page pool
     preempted_reqs: int = 0  # distinct requests that were evicted
+    # §10 fleet ledger (0 unless run through fleet_serve_replay; NOT hashed)
+    migrated: int = 0        # requests live-migrated across pods
+    quarantines: int = 0     # pods walked to quarantine
+    pod_restores: int = 0    # pods restored through the cool-down
 
     @property
     def tokens_per_joule(self) -> float:
@@ -730,6 +1020,159 @@ def serve_replay(scenario: Scenario, workload: RequestWorkload, model,
         preempted_reqs=sum(1 for r in reqs.values() if r.preempts > 0))
 
 
+def fleet_serve_replay(scenario: Scenario, workload: RequestWorkload,
+                       model, params, n_pods: int = 2,
+                       runtime: Optional[RT.EnergyAwareRuntime] = None,
+                       engine_steps: int = 6, tick_s: float = 60.0,
+                       sweep=(10.0, 45.0, 4), util_sweep=(0.25, 1.0, 4),
+                       guard_band_c: float = 3.0, batch_slots: int = 4,
+                       max_len: int = 64, drain_ticks: int = 32,
+                       engine_seed: int = 0, faults=None,
+                       degrade_after: int = 2, quarantine_after: int = 4,
+                       restore_after: int = 3, restore_below_c: float = 70.0,
+                       power_budget_w: Optional[float] = None,
+                       enforce_budget: bool = False,
+                       **engine_kwargs) -> ServeReplayResult:
+    """The §10 pod-loss serving drill: a request workload served by
+    ``n_pods`` engines (one per failure domain) over ONE shared
+    :class:`~repro.serve.cache.HostPagePool`, under the fleet health
+    machine.  When a pod is quarantined its engine is drained — active
+    slots evicted page-exact to the shared pool — and every in-flight
+    request is live-migrated to the survivors' engines, where prefix
+    re-prefill plus greedy decode with the shared weights resumes it
+    bitwise: ``outputs`` equals the no-failure day's outputs, rid for rid
+    (pinned by ``tests/test_fleet.py``).
+
+    Arrivals are routed ``rid % len(live_pods)`` over the pods currently
+    accepting work — deterministic, and a drained pod rejoins the rotation
+    the tick it is restored.
+    """
+    from repro.serve import Engine, Request
+    from repro.serve.cache import HostPagePool
+
+    rt = runtime if runtime is not None else RT.EnergyAwareRuntime(
+        TF.StepProfile.from_roofline(compute_s=0.8, memory_s=0.45,
+                                     collective_s=0.2),
+        policy="power_save")
+    from repro.control.lut import sweep_points
+    field = rt.build_field(sweep_points(*sweep), sweep_points(*util_sweep))
+    chips = rt.substrate.n_domains
+    spans = PodTopology.partition(chips, n_pods)
+    assignment = ElasticWorkAssignment(chips)
+    elastic = ElasticActuator(assignment)
+    fleet = ctl.FleetActuator.from_runtime(
+        rt, t_amb=scenario.ambient_at(0), field=field)
+    if faults is None and scenario.chaos is not None:
+        faults = scenario.chaos()
+    if n_pods == 1 and faults is not None:
+        fleet.write_faults = faults
+
+    pool = HostPagePool()  # ONE host pool: the migration fabric
+    ctx = ctl.TickContext()
+    ela_f = ctl.FanoutTelemetry(elastic)
+    flt_f = ctl.FanoutTelemetry(fleet)
+    pods: List[ctl.PodDomain] = []
+    for i, (lo, hi) in enumerate(spans):
+        pf = None
+        if faults is not None and (scenario.chaos_pod is None
+                                   or scenario.chaos_pod == i):
+            pf = faults if n_pods == 1 else faults.for_pod(i)
+        eng = Engine(model, params, batch_slots=batch_slots,
+                     max_len=max_len, seed=engine_seed, pool=pool,
+                     **engine_kwargs)
+        tel = ctl.EngineTelemetry()
+        eng.on_tick.append(tel.on_tick)
+        controller = ctl.LutController(
+            ctl.PodPlanner(rt.planner, lo, hi, ctx=ctx),
+            field=field if n_pods == 1 else field.slice_chips(lo, hi),
+            guard_band_c=guard_band_c)
+        amb_src = ctl.AmbientSensor(scenario.ambient)
+        flt_src = flt_f.view(lo, hi, primary=(i == 0))
+        ch_kw = {}
+        if pf is not None:
+            amb_src = ctl.ChaosTelemetry(amb_src, pf)
+            flt_src = ctl.ChaosTelemetry(flt_src, pf)
+            controller.faults = pf
+            if n_pods > 1:
+                ch_kw["write_faults"] = pf
+        bus = ctl.TelemetryBus(
+            [amb_src, tel, ela_f.view(lo, hi, primary=(i == 0)), flt_src],
+            max_age=0.75 if faults is not None else None)
+        pods.append(ctl.PodDomain(
+            index=i, lo=lo, hi=hi, bus=bus, controller=controller,
+            rails=ctl.PodRailChannel(fleet, lo, hi, **ch_kw),
+            engine=eng, extra=[ctl.EngineActuator(eng)]))
+    loop = ctl.FleetLoop(pods, fleet, elastic=elastic, ctx=ctx,
+                         power_budget_w=power_budget_w,
+                         enforce_budget=enforce_budget,
+                         degrade_after=degrade_after,
+                         quarantine_after=quarantine_after,
+                         restore_after=restore_after,
+                         restore_below_c=restore_below_c)
+    for pod in pods:
+        pod.controller.reset()
+
+    def live():
+        return [p for p in pods if p.state in (ctl.HEALTHY, ctl.DEGRADED)]
+
+    vocab = model.cfg.vocab_size
+    by_tick = workload.by_tick()
+    hot_by_tick: Dict[int, List[Hotspot]] = {}
+    for h in scenario.hotspots:
+        hot_by_tick.setdefault(h.tick, []).append(h)
+    reqs: Dict[int, Request] = {}
+    powers: List[float] = []
+    caps: List[int] = []
+
+    def busy():
+        return any(p.engine.queue
+                   or any(r is not None for r in p.engine.slot_req)
+                   for p in pods)
+
+    tick = 0
+    while tick < scenario.ticks or (tick < scenario.ticks + drain_ticks
+                                    and busy()):
+        targets = live()
+        for a in by_tick.get(tick, ()):
+            req = Request(a.rid, serve_prompt(a.rid, a.prompt_len, vocab),
+                          max_new=a.max_new)
+            reqs[a.rid] = req
+            targets[a.rid % len(targets)].engine.submit(req)
+        for p in pods:
+            if p.state in (ctl.HEALTHY, ctl.DEGRADED):
+                for _ in range(engine_steps):
+                    p.engine.step()
+        for h in hot_by_tick.get(tick, ()):
+            fleet.T = np.asarray(fleet.T).copy()
+            fleet.T[h.chip] = h.t_chip
+        rep = loop.step(now=float(tick))
+        powers.append(rep.readout.pod_power_w)
+        pod_caps = [p.engine.admit_cap for p in live()]
+        applied = [c for c in pod_caps if c is not None]
+        caps.append(min(applied) if applied else -1)
+        tick += 1
+
+    ok = [r for p in pods for r in p.engine.finished if r.error is None]
+    bad = [r for p in pods for r in p.engine.finished
+           if r.error is not None]
+    waits = [float(r.finish_tick - r.submit_tick) for r in ok]
+    outputs = tuple(tuple(reqs[rid].out) for rid in sorted(reqs))
+    return ServeReplayResult(
+        name=scenario.name, workload=workload.name, ticks=tick,
+        engine_ticks=sum(p.engine.ticks for p in pods),
+        finished=len(ok), rejected=len(bad),
+        tokens=sum(len(r.out) for r in ok),
+        energy_j=float(np.sum(powers) * tick_s),
+        max_wait=float(max(waits)) if waits else 0.0,
+        mean_wait=float(np.mean(waits)) if waits else 0.0,
+        caps=np.asarray(caps, np.int64), outputs=outputs,
+        preempts=sum(p.engine.preempts for p in pods),
+        preempted_reqs=sum(1 for r in reqs.values() if r.preempts > 0),
+        migrated=loop.migrated_total,
+        quarantines=sum(1 for e in loop.events if ":quarantined@" in e),
+        pod_restores=sum(1 for e in loop.events if ":restored@" in e))
+
+
 # ---------------------------------------------------------------------------
 # CLI smoke: python -m repro.scenarios <scenario> [--quick] [--json]
 # ---------------------------------------------------------------------------
@@ -757,9 +1200,44 @@ def _main(argv=None) -> int:
                                      collective_s=0.2),
         policy="power_save")
     sweep = (15.0, 40.0, 4) if args.quick else (10.0, 45.0, 8)
+    u_knots = (0.25, 1.0, 3 if args.quick else 4)
+    if args.scenario == "pod_loss_day":
+        # the §10 drill replays through the multi-pod FleetLoop: verify
+        # determinism AND that the day actually walked a pod through
+        # quarantine and back
+        kw = dict(n_pods=2, runtime=rt, sweep=sweep, util_sweep=u_knots)
+        a = fleet_replay(sc, **kw)
+        b = fleet_replay(sc, **kw)
+        assert a.fingerprint == b.fingerprint, \
+            f"fleet replay not deterministic: {a.fingerprint} != " \
+            f"{b.fingerprint}"
+        assert a.t_max < TF.T_MAX_CHIP, \
+            f"thermal envelope violated: {a.t_max:.1f}C >= {TF.T_MAX_CHIP}C"
+        assert a.quarantines >= 1, f"no pod quarantined: {a.events}"
+        assert a.pod_restores >= 1, f"no pod restored: {a.events}"
+        out = {
+            "scenario": a.name, "ticks": a.ticks, "n_pods": a.n_pods,
+            "fingerprint": a.fingerprint, "replans": a.replans,
+            "mean_saving": round(a.mean_saving, 4),
+            "t_max": round(a.t_max, 2), "states": a.states,
+            "quarantines": a.quarantines, "pod_restores": a.pod_restores,
+            "condemned": list(a.condemned), "events": a.events,
+        }
+        if args.json:
+            print(json.dumps(out, indent=2))
+        else:
+            print(f"[{out['scenario']}] deterministic over {out['ticks']} "
+                  f"ticks x {out['n_pods']} pods "
+                  f"(fingerprint {out['fingerprint']})")
+            for k in ("replans", "mean_saving", "t_max", "states",
+                      "quarantines", "pod_restores"):
+                print(f"  {k:>22}: {out[k]}")
+            for e in out["events"]:
+                print(f"  {'event':>22}: {e}")
+        return 0
     controller = rt.controller(
         field=rt.build_field(sweep_points(*sweep),
-                             sweep_points(0.25, 1.0, 3 if args.quick else 4)),
+                             sweep_points(*u_knots)),
         guard_band_c=3.0)
     a = replay(sc, runtime=rt, controller=controller)
     b = replay(sc, runtime=rt, controller=controller)

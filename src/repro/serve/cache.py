@@ -255,18 +255,36 @@ class HostPagePool:
     Accounting is **page-exact**: ``put`` records how many device pages the
     eviction actually released (a short request holds fewer pages than its
     slot's full span), so ``pages_held``/``peak_pages`` match the allocator
-    ledger instead of over-counting whole slots."""
+    ledger instead of over-counting whole slots.
+
+    Migration contract (DESIGN.md §10): when pods share one pool, each
+    entry carries a provenance ledger — the *origin* allocator, the device
+    page ids the eviction covered, and whether the origin actually freed
+    them.  ``take(owner=...)`` hard-errors on a cross-allocator resume
+    whose origin still owns the pages (resuming would double-represent the
+    KV: the stale block table could still scatter into them) and on a
+    resume whose position cannot fit the target allocator's block-table
+    span — both print the ledger instead of silently corrupting state."""
 
     def __init__(self):
         self._rows: Dict[Any, Any] = {}
+        self._ledger: Dict[Any, Dict[str, Any]] = {}
         self.puts = 0
         self.peak = 0
         self.pages_held = 0   # device pages currently parked host-side
         self.pages_evicted = 0  # cumulative pages moved to host
         self.peak_pages = 0
+        self.migrations = 0   # cross-allocator resumes (pod -> pod)
 
-    def put(self, rid, rows, pos: int, pages: int = 1) -> None:
+    def put(self, rid, rows, pos: int, pages: int = 1, *,
+            owner=None, page_ids=None, freed: bool = True) -> None:
         self._rows[rid] = (jax.device_get(rows), int(pos), int(pages))
+        self._ledger[rid] = {
+            "owner": owner,
+            "page_ids": (None if page_ids is None
+                         else [int(p) for p in np.asarray(page_ids).ravel()]),
+            "freed": bool(freed),
+        }
         self.puts += 1
         self.peak = max(self.peak, len(self._rows))
         self.pages_held += int(pages)
@@ -278,9 +296,38 @@ class HostPagePool:
         entry = self._rows.get(rid)
         return 0 if entry is None else entry[2]
 
-    def take(self, rid):
-        """Pop (rows, pos) for a request being resumed."""
-        rows, pos, pages = self._rows.pop(rid)
+    def ledger(self, rid) -> Optional[Dict[str, Any]]:
+        """Provenance of a parked request (origin allocator, device page
+        ids, freed flag); None if unknown."""
+        return self._ledger.get(rid)
+
+    def take(self, rid, *, owner=None):
+        """Pop (rows, pos) for a request being resumed.
+
+        ``owner`` is the allocator about to receive the rows; pass it on
+        every resume so cross-pod migrations are checked against the
+        provenance ledger recorded at eviction time."""
+        led = self._ledger.get(rid, {})
+        rows, pos, pages = self._rows[rid]
+        if owner is not None:
+            origin = led.get("owner")
+            foreign = origin is not None and origin is not owner
+            if foreign and not led.get("freed", True):
+                raise RuntimeError(
+                    f"HostPagePool: refusing to resume request {rid!r} into "
+                    f"a foreign allocator while its origin still owns the "
+                    f"evicted pages (resume would scatter into a stale "
+                    f"block table); ledger={led}")
+            cap = getattr(owner, "max_len", None)
+            if cap is not None and int(pos) > int(cap):
+                raise RuntimeError(
+                    f"HostPagePool: request {rid!r} parked at pos={pos} "
+                    f"exceeds the target allocator's max_len {cap}; "
+                    f"ledger={led}")
+            if foreign:
+                self.migrations += 1
+        del self._rows[rid]
+        self._ledger.pop(rid, None)
         self.pages_held -= pages
         return rows, pos
 

@@ -88,7 +88,8 @@ class Engine:
                  page_size: int = 16, expandable: bool = False,
                  paged: bool = False, total_pages: Optional[int] = None,
                  speculate: int = 0,
-                 seed: int = 0, warmup: bool = True):
+                 seed: int = 0, warmup: bool = True,
+                 pool: Optional[HostPagePool] = None):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -137,7 +138,9 @@ class Engine:
         self.slot_req: List[Optional[Request]] = [None] * self.B
         self.queue: List[Request] = []
         self.finished: List[Request] = []
-        self.pool = HostPagePool()  # preempted KV rows, host side
+        # preempted KV rows, host side; pass a shared pool to let several
+        # pod engines exchange requests (fleet migration, DESIGN.md §10)
+        self.pool = pool if pool is not None else HostPagePool()
         self.preempts = 0
         self.spec_proposed = 0  # draft tokens offered to verification
         self.spec_accepted = 0  # draft tokens accepted (bitwise == greedy)
@@ -275,7 +278,7 @@ class Engine:
                 # resume a preempted request: its KV rows come back from
                 # the host page pool bit for bit — no recompute, no drift
                 slot = self.mgr.allocate(len(req.prompt))
-                rows, pos = self.pool.take(req.rid)
+                rows, pos = self.pool.take(req.rid, owner=self.mgr)
                 if isinstance(self.mgr, (ExpandableKVCacheManager,
                                          ExpandablePagedKVCacheManager)):
                     self.mgr.ensure(pos + 1)
@@ -320,8 +323,11 @@ class Engine:
             # entries; a short request never pays its slot's full span)
             pages = self.mgr.slot_pages(slot)
             rows = self.mgr.read_rows([slot])
+            page_ids = (self.mgr.block_table[slot, :pages].copy()
+                        if self._paged else None)
             self.pool.put(req.rid, rows, int(self.mgr.pos[slot]),
-                          pages=pages)
+                          pages=pages, owner=self.mgr, page_ids=page_ids,
+                          freed=True)
             self.slot_req[slot] = None
             self.mgr.free(slot)
             req.preempts += 1
@@ -329,6 +335,16 @@ class Engine:
             requeue.append(req)
         self.queue[:0] = requeue  # resume first, oldest first
         return n_evict
+
+    def drain(self) -> List[Request]:
+        """Quarantine drain (DESIGN.md §10): evict every active slot to the
+        host page pool and hand back the whole pending queue — resumable
+        requests first, oldest first — so a fleet router can resubmit them
+        to healthy pods.  The engine is left empty (no active slots, no
+        queue) with all device pages back on the free list."""
+        self.preempt_to(0)
+        out, self.queue = self.queue, []
+        return out
 
     def _prefill_into(self, slot: int, req: Request):
         """Stateful-family path: exact-length prefill, scatter one row."""
